@@ -1,0 +1,95 @@
+"""Paper Table 1: path/tree homomorphism counting on SNAP-like graphs.
+
+Ref   — materialising join plan (standard engine behaviour)
+Opt   — §4.2 logical rewrite (freq propagation, joins + regrouping)
+Opt⁺  — §5 FreqJoin physical operator (jitted, zero materialisation)
+
+Ref/Opt run eagerly with an OOM guard; guard trips reproduce the paper's
+X entries.  Opt⁺ times the compiled executable (compile excluded — steady
+state, like the paper's warm runs).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from repro.core import Executor, MaterialisationLimit, plan_query
+from repro.data import make_graph_db, path_query, tree_query
+
+OOM_GUARD = 20_000_000  # materialised-tuple budget for the baselines
+
+
+def _time(fn, repeats=3):
+    fn()  # warm-up (matches the paper's protocol)
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return float(np.mean(ts)), float(np.std(ts))
+
+
+def run(n_nodes=20_000, n_edges=200_000, seed=0, repeats=3, queries=None):
+    with jax.experimental.enable_x64():
+        db, schema = make_graph_db(n_nodes, n_edges, seed=seed)
+        ex = Executor(db, schema, freq_dtype="float64",
+                      oom_guard=OOM_GUARD)
+        if queries is None:
+            queries = [(f"path-{k:02d}", path_query(k)) for k in (3, 4, 5)] \
+                + [(f"tree-{v:02d}", tree_query(v)) for v in (1, 2, 3)]
+        rows = []
+        for name, q in queries:
+            row = {"query": name}
+            # Opt+ (jitted FreqJoin plan)
+            plan = plan_query(q, schema, mode="opt_plus")
+            fn = ex.compile(plan)
+
+            def run_optp():
+                out = fn(db)
+                jax.block_until_ready(list(out.values()))
+                return out
+
+            mean, std = _time(run_optp, repeats)
+            row["opt_plus_s"] = mean
+            row["opt_plus_std"] = std
+            row["count"] = float(run_optp()["count(*)"])
+
+            # Opt (freq propagation with materialised pairwise joins)
+            try:
+                mean, std = _time(
+                    lambda: ex.execute(plan_query(q, schema, mode="opt")),
+                    repeats=1)
+                row["opt_s"] = mean
+            except MaterialisationLimit:
+                row["opt_s"] = None  # X
+            # Ref (materialising baseline)
+            try:
+                mean, std = _time(
+                    lambda: ex.execute(plan_query(q, schema, mode="ref")),
+                    repeats=1)
+                row["ref_s"] = mean
+            except MaterialisationLimit:
+                row["ref_s"] = None  # X — the paper's OOM entries
+            rows.append(row)
+        return rows
+
+
+def main():
+    rows = run()
+    print(f"{'query':10s} {'Ref':>10s} {'Opt':>10s} {'Opt+':>10s} "
+          f"{'speedup':>8s}  count")
+    for r in rows:
+        ref = f"{r['ref_s']:.3f}" if r["ref_s"] else "X"
+        opt = f"{r['opt_s']:.3f}" if r["opt_s"] else "X"
+        sp = (f"{r['ref_s'] / r['opt_plus_s']:.1f}x"
+              if r["ref_s"] else "inf")
+        print(f"{r['query']:10s} {ref:>10s} {opt:>10s} "
+              f"{r['opt_plus_s']:>10.4f} {sp:>8s}  {r['count']:.3e}")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

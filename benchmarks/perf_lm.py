@@ -1,0 +1,130 @@
+import os
+
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+"""§Perf hillclimb — LM cells (structural, from compiled artifacts).
+
+Per variant, lowers the cell on the single-pod mesh and reports the
+roofline terms (scan-corrected) and per-device memory.  Variants encode
+the hypothesis ladder recorded in EXPERIMENTS.md §Perf:
+
+moonshot-v1-16b-a3b × train_4k (most collective-bound):
+  it0  baseline (M=8 microbatches, FSDP over pod+data)
+  it1  M=2 (microbatch 128): params re-gathered 4× less often
+  it2  M=2 + grads-in-bf16 accumulation? (kept f32 — rejected, see log)
+
+mixtral-8x22b × train_4k (memory fit):
+  it0  baseline (f32 Adam m/v): 18.3 GiB/dev > 16 GiB HBM
+  it1  bf16 Adam m/v
+  it2  bf16 m/v + M=16 (microbatch 16): smaller activations
+
+Run:  PYTHONPATH=src python -m benchmarks.perf_lm [--quick]
+"""
+
+import argparse      # noqa: E402
+import dataclasses   # noqa: E402
+import json          # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import SHAPES, get_config  # noqa: E402
+from repro.launch.dryrun import lower_train_cell  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from benchmarks.roofline import (  # noqa: E402
+    HBM_BW,
+    ICI_BW,
+    PEAK_FLOPS,
+    collective_seconds,
+    model_flops,
+)
+
+
+def lower_variant(arch, shape, *, microbatch=None, rules=None,
+                  opt_dtype="float32", probes=True):
+    """Lower a train-cell variant; return terms + memory."""
+    import repro.training.step as step_mod
+    from repro.training import optimizer as opt_mod
+
+    cfg = get_config(arch)
+    cell = SHAPES[shape]
+    if microbatch:
+        cell = dataclasses.replace(cell, microbatch=microbatch)
+    mesh = make_production_mesh(multi_pod=False)
+    n_dev = mesh.devices.size
+
+    # opt dtype knob: patch init_train_state default through a wrapper
+    orig_init = step_mod.init_train_state
+    if opt_dtype != "float32":
+        step_mod.init_train_state = lambda p: orig_init(
+            p, jnp.bfloat16)
+        import repro.launch.dryrun as dr
+        dr.init_train_state = step_mod.init_train_state
+    try:
+        lowered = lower_train_cell(cfg, cell, mesh, rules=rules)
+        compiled = lowered.compile()
+    finally:
+        step_mod.init_train_state = orig_init
+        import repro.launch.dryrun as dr
+        dr.init_train_state = orig_init
+
+    cost = compiled.cost_analysis()
+    mem = compiled.memory_analysis()
+    coll_s_once, moved = collective_seconds(compiled.as_text(), n_dev)
+    M = max(1, cell.global_batch // max(cell.microbatch, 1))
+    out = {
+        "arch": arch, "shape": shape, "microbatches": M,
+        "opt_dtype": opt_dtype,
+        # once-counted HLO values; per-ubatch collectives scale by M
+        "flops_once": cost.get("flops", 0.0),
+        "bytes_once": cost.get("bytes accessed", 0.0),
+        "coll_s_times_M": coll_s_once * M,
+        "moved_once": {k: v for k, v in moved.items()},
+        "arg_GiB": (getattr(mem, "argument_size_in_bytes", 0) or 0) / 2**30,
+        "temp_GiB": (getattr(mem, "temp_size_in_bytes", 0) or 0) / 2**30,
+    }
+    out["total_GiB"] = out["arg_GiB"] + out["temp_GiB"]
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", default="all",
+                    choices=["all", "moonshot", "mixtral"])
+    ap.add_argument("--out", default="perf_lm_results.json")
+    args = ap.parse_args()
+    rows = []
+
+    if args.cell in ("all", "moonshot"):
+        for label, kw in [
+            ("it0-baseline", {}),
+            ("it1-M2", {"microbatch": 128}),
+        ]:
+            r = lower_variant("moonshot-v1-16b-a3b", "train_4k", **kw)
+            r["variant"] = f"moonshot/{label}"
+            rows.append(r)
+            print(f"[perf_lm] {r['variant']:24s} M={r['microbatches']} "
+                  f"coll≈{r['coll_s_times_M']:.3f}s×  "
+                  f"mem={r['total_GiB']:.1f} GiB", flush=True)
+
+    if args.cell in ("all", "mixtral"):
+        for label, kw in [
+            ("it0-baseline", {}),
+            ("it1-bf16-opt", {"opt_dtype": "bfloat16"}),
+            ("it2-bf16-M16", {"opt_dtype": "bfloat16", "microbatch": 16}),
+        ]:
+            r = lower_variant("mixtral-8x22b", "train_4k", **kw)
+            r["variant"] = f"mixtral/{label}"
+            rows.append(r)
+            print(f"[perf_lm] {r['variant']:24s} M={r['microbatches']} "
+                  f"coll≈{r['coll_s_times_M']:.3f}s×  "
+                  f"mem={r['total_GiB']:.1f} GiB", flush=True)
+
+    with open(args.out, "w") as f:
+        json.dump(rows, f, indent=1, default=str)
+    print(f"[perf_lm] → {args.out}")
+
+
+if __name__ == "__main__":
+    main()

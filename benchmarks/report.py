@@ -1,0 +1,31 @@
+"""Render the roofline JSON into the EXPERIMENTS.md markdown table."""
+
+import json
+import sys
+
+
+def main(path="roofline_results.json"):
+    d = json.load(open(path))
+    rows = d["rows"]
+    print("| arch | shape | compute (s) | memory (s) | collective (s) | "
+          "bottleneck | MODEL_FLOPS | useful | roofline frac |")
+    print("|---|---|---:|---:|---:|---|---:|---:|---:|")
+    for r in rows:
+        print(f"| {r['arch']} | {r['shape']} | {r['compute_s']:.3e} | "
+              f"{r['memory_s']:.3e} | {r['collective_s']:.3e} | "
+              f"{r['bottleneck']} | {r['model_flops']:.2e} | "
+              f"{r['useful_flops_ratio']:.2f} | "
+              f"{r['roofline_fraction']:.4f} |")
+    worst = min(rows, key=lambda r: r["roofline_fraction"])
+    print(f"\nworst fraction: {worst['arch']} × {worst['shape']} "
+          f"({worst['roofline_fraction']:.5f})")
+    cb = [r for r in rows if r["bottleneck"] == "collective"]
+    if cb:
+        m = max(cb, key=lambda r: r["collective_s"] / max(r["compute_s"],
+                                                          1e-12))
+        print(f"most collective-bound: {m['arch']} × {m['shape']} "
+              f"(N/C = {m['collective_s'] / max(m['compute_s'], 1e-12):.1f})")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

@@ -1,0 +1,223 @@
+import os
+
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+"""Roofline analysis per (arch × shape) on the single-pod mesh (§Roofline).
+
+Terms (seconds, per device, per step):
+
+    compute    = HLO_FLOPs / PEAK_FLOPS
+    memory     = HLO_bytes / HBM_BW
+    collective = Σ collectives bytes_moved / ICI_BW
+
+`cost_analysis` counts a `while` body once, so scanned layers/microbatches
+would be undercounted by ~L·M.  We therefore lower *probe* models at
+depths L∈{0,1,2} with EVERY scan fully unrolled (probe compiles stay small
+because at most 2 layers of chunk bodies ever unroll) and compose:
+
+    f(0) = embed+head(+loss/grads)          — per microbatch/pass
+    F_layer  = f(1) − f(0)                  — one block, fwd(+bwd)
+    F_shared = f(1) − f(0) − F_layer_mamba  — hybrid only, where
+               F_layer_mamba = f(2) − f(1)  (L=2 ⇒ 1 shared + 2 mamba)
+    per_pass = f(0) + L·F_layer [+ apps·F_shared]
+    train:   total = M·per_pass + analytic optimizer tail
+             (opt flops ≈ 15·N/dev, opt bytes ≈ 56·N/dev B, no collectives
+             — state is sharded identically to params)
+    serve:   total = per_pass
+
+Collective bytes come from the partitioned HLO text: per-op local shapes ×
+ring-transfer factors with the parsed replica-group size.
+
+Hardware model (TPU v5e-class): 197 TFLOP/s bf16, 819 GB/s HBM,
+50 GB/s ICI per chip.
+"""
+
+import argparse      # noqa: E402
+import dataclasses   # noqa: E402
+import json          # noqa: E402
+import re            # noqa: E402
+
+import jax           # noqa: E402
+
+from repro.configs import ARCHS, SHAPES, cells_for, get_config  # noqa: E402
+from repro.launch.dryrun import _LOWER  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+}
+_OP_RE = re.compile(
+    r"= *((?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)) *"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"[^\n]*")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=(\{\{[^}]*\}[^}]*\}|\[\d+,\d+\])")
+
+
+def _group_size(attr_text: str, default: int) -> int:
+    m = _GROUPS_RE.search(attr_text)
+    if not m:
+        return default
+    g = m.group(1)
+    if g.startswith("[{") or g.startswith("{{"):
+        first = g.split("}")[0]
+        return max(1, first.count(",") + 1)
+    if g.startswith("["):
+        dims = [int(x) for x in g.strip("[]").split(",")]
+        return dims[1] if len(dims) == 2 else default
+    return default
+
+
+def collective_seconds(hlo: str, n_dev: int) -> tuple[float, dict]:
+    """Estimated per-device seconds on the interconnect for ONE pass of
+    the HLO text (loop bodies counted once) + per-kind byte totals."""
+    moved = {"all-gather": 0.0, "all-reduce": 0.0, "reduce-scatter": 0.0,
+             "all-to-all": 0.0, "collective-permute": 0.0}
+    for m in _OP_RE.finditer(hlo):
+        shapes = _SHAPE_RE.findall(m.group(1))
+        out_bytes = 0
+        for dt, dims in shapes:
+            if dt not in _DTYPE_BYTES:
+                continue
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            out_bytes += n * _DTYPE_BYTES[dt]
+        kind = m.group(2)
+        g = _group_size(m.group(0), n_dev)
+        ring = (g - 1) / max(g, 1)
+        factor = {"all-gather": ring, "all-reduce": 2 * ring,
+                  "reduce-scatter": (g - 1), "all-to-all": ring,
+                  "collective-permute": 1.0}[kind]
+        moved[kind] += out_bytes * factor
+    return sum(moved.values()) / ICI_BW, moved
+
+
+def _lower_cost(cfg, cell, mesh):
+    lowered = _LOWER[cell.kind](cfg, cell, mesh)
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis()
+    coll_s, moved = collective_seconds(compiled.as_text(),
+                                       mesh.devices.size)
+    return {"flops": cost.get("flops", 0.0),
+            "bytes": cost.get("bytes accessed", 0.0),
+            "coll_s": coll_s, "moved": moved}
+
+
+def _probe(cfg, cell, mesh, n_layers):
+    """Probes fully unroll every scan so cost_analysis sees real trip
+    counts (layer bodies AND chunk/KV-block scans)."""
+    return _lower_cost(
+        dataclasses.replace(cfg, n_layers=n_layers, probe_unroll=True),
+        cell, mesh)
+
+
+def _compose(cfg, cell, probes, n_dev):
+    """Scan-aware composition of per-device totals (see module doc)."""
+    L = cfg.n_layers
+    M = max(1, cell.global_batch // max(cell.microbatch, 1)) \
+        if cell.kind == "train" else 1
+    n_params_dev = cfg.param_count() / n_dev
+
+    def comb(key):
+        f0, f1, f2 = probes[0][key], probes[1][key], probes[2][key]
+        if cfg.family == "hybrid":
+            from repro.models.model import _hybrid_groups
+            f_mamba = f2 - f1                 # L=2: 1 shared + 2 mamba
+            f_shared = max(f1 - f0 - f_mamba, 0.0)
+            apps = len(_hybrid_groups(cfg))
+            per_pass = f0 + apps * f_shared + L * f_mamba
+        else:
+            f_layer = f1 - f0
+            per_pass = f0 + L * f_layer
+        per_pass = max(per_pass, 0.0)
+        if cell.kind == "train":
+            opt_tail = {"flops": 15.0 * n_params_dev,
+                        "bytes": 56.0 * n_params_dev,
+                        "coll_s": 0.0}[key]
+            return M * per_pass + opt_tail
+        return per_pass
+
+    return {"flops": comb("flops"), "bytes": comb("bytes"),
+            "coll_s": comb("coll_s")}
+
+
+def model_flops(cfg, cell) -> float:
+    """Analytic MODEL_FLOPS for the whole step (all devices)."""
+    n = cfg.active_param_count()
+    if cell.kind == "train":
+        tokens = cell.global_batch * cell.seq_len
+        return 6.0 * n * tokens
+    if cell.kind == "prefill":
+        tokens = cell.global_batch * cell.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * cell.global_batch  # decode: one token per row
+
+
+def run_cell(arch: str, shape: str):
+    cfg = get_config(arch)
+    cell = SHAPES[shape]
+    mesh = make_production_mesh(multi_pod=False)
+    n_dev = mesh.devices.size
+    probes = {n: _probe(cfg, cell, mesh, n) for n in (0, 1, 2)}
+    tot = _compose(cfg, cell, probes, n_dev)
+
+    compute_s = tot["flops"] / PEAK_FLOPS
+    memory_s = tot["bytes"] / HBM_BW
+    coll_s = tot["coll_s"]
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": coll_s}
+    bottleneck = max(terms, key=terms.get)
+    mf = model_flops(cfg, cell)
+    hlo_flops_alldev = tot["flops"] * n_dev
+    return {
+        "arch": arch, "shape": shape, "mesh": "16x16", "devices": n_dev,
+        **{k: float(v) for k, v in terms.items()},
+        "bottleneck": bottleneck.replace("_s", ""),
+        "model_flops": mf,
+        "hlo_flops_per_dev": tot["flops"],
+        "useful_flops_ratio": mf / max(hlo_flops_alldev, 1.0),
+        "step_time_bound_s": max(terms.values()),
+        "roofline_fraction": (mf / n_dev / PEAK_FLOPS)
+        / max(max(terms.values()), 1e-12),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=list(ARCHS))
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--out", default="roofline_results.json")
+    args = ap.parse_args()
+    archs = [args.arch] if args.arch else list(ARCHS)
+    rows, failures = [], []
+    for arch in archs:
+        shapes = [args.shape] if args.shape else cells_for(arch)
+        for shape in shapes:
+            if shape not in cells_for(arch):
+                continue
+            try:
+                r = run_cell(arch, shape)
+                rows.append(r)
+                print(f"[roofline] {arch:22s} {shape:12s} "
+                      f"C={r['compute_s']:.3e}s M={r['memory_s']:.3e}s "
+                      f"N={r['collective_s']:.3e}s → {r['bottleneck']:10s} "
+                      f"frac={r['roofline_fraction']:.3f} "
+                      f"useful={r['useful_flops_ratio']:.2f}", flush=True)
+            except Exception as e:  # noqa: BLE001
+                failures.append((arch, shape, repr(e)))
+                print(f"[roofline] FAIL {arch} {shape}: {e}", flush=True)
+    with open(args.out, "w") as f:
+        json.dump({"rows": rows, "failures": failures}, f, indent=1)
+    print(f"[roofline] {len(rows)} cells → {args.out}")
+
+
+if __name__ == "__main__":
+    main()

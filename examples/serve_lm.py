@@ -1,0 +1,19 @@
+"""Serving example: batched greedy generation through the wave engine.
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import sys
+
+from repro.launch import serve as serve_mod
+
+
+def main():
+    sys.argv = ["serve.py", "--arch", "qwen3-14b", "--smoke",
+                "--n-requests", "8", "--n-slots", "4",
+                "--prompt-len", "12", "--max-new", "24"]
+    serve_mod.main()
+
+
+if __name__ == "__main__":
+    main()

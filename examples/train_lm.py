@@ -1,0 +1,40 @@
+"""End-to-end training driver: train a ~135M-param smollm-135m (or its
+smoke config) for a few hundred steps with checkpointing + resume.
+
+The full config is the real assigned architecture; on this 1-core CPU
+container the default runs the smoke config so the example finishes in
+minutes.  Pass --real for the 135M model (slow on CPU, the intended
+config for a TPU slice).
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300
+    PYTHONPATH=src python examples/train_lm.py --steps 300 --resume
+"""
+
+import argparse
+import sys
+
+from repro.launch import train as train_mod
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--real", action="store_true",
+                    help="full smollm-135m instead of the smoke config")
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_lm")
+    args = ap.parse_args()
+
+    argv = ["--arch", "smollm-135m",
+            "--steps", str(args.steps),
+            "--batch", "8", "--seq", "128",
+            "--ckpt-dir", args.ckpt_dir,
+            "--ckpt-every", "100",
+            "--log-every", "20"]
+    if not args.real:
+        argv.append("--smoke")
+    sys.argv = ["train.py"] + argv
+    train_mod.main()
+
+
+if __name__ == "__main__":
+    main()

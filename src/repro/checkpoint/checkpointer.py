@@ -1,0 +1,135 @@
+"""Sharded, async, elastic checkpointing.
+
+Layout:  <dir>/step_<N>/manifest.json + one .npy per pytree leaf.
+
+Design points for 1000+-node deployments (scaled to this container):
+
+  * **Sharding-agnostic restore.** Leaves are saved as full logical arrays
+    with a manifest of paths/shapes/dtypes; `restore(..., shardings=...)`
+    re-places them under ANY mesh — a job checkpointed on (16,16) restores
+    onto (2,16,16) or a single CPU (elastic re-scaling test in
+    tests/test_checkpoint.py).  On a real multi-host pod each host would
+    write only its addressable shards with the same manifest format; the
+    single-process container degenerates to full arrays.
+  * **Async save** off the critical path (background thread; `wait()`
+    joins).  Training continues while the previous step serialises.
+  * **Atomicity**: saves land in `step_N.tmp` and are renamed only after
+    the manifest is fully written — a mid-save crash can't corrupt the
+    latest complete checkpoint.
+  * **Resume idempotence**: `latest_step()` + the deterministic data
+    pipeline (repro.data.lm_pipeline) make restart-replay exact.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import shutil
+import threading
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in leaves:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = leaf
+    return out, treedef
+
+
+class Checkpointer:
+    def __init__(self, directory: str | pathlib.Path):
+        self.dir = pathlib.Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self._thread: threading.Thread | None = None
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, tree: Any, *, async_: bool = True):
+        """Snapshot `tree` at `step`. Device arrays are fetched to host
+        before the background write so training can mutate them freely."""
+        flat, _ = _flatten(tree)
+        host = {k: np.asarray(jax.device_get(v)) for k, v in flat.items()}
+
+        def write():
+            tmp = self.dir / f"step_{step}.tmp"
+            final = self.dir / f"step_{step}"
+            if tmp.exists():
+                shutil.rmtree(tmp)
+            tmp.mkdir(parents=True)
+            manifest = {}
+            for i, (k, v) in enumerate(sorted(host.items())):
+                fname = f"leaf_{i:05d}.npy"
+                np.save(tmp / fname, v)
+                manifest[k] = {"file": fname, "shape": list(v.shape),
+                               "dtype": str(v.dtype)}
+            with open(tmp / "manifest.json", "w") as f:
+                json.dump({"step": step, "leaves": manifest}, f)
+            if final.exists():
+                shutil.rmtree(final)
+            os.rename(tmp, final)
+
+        self.wait()
+        if async_:
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+        else:
+            write()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    # ------------------------------------------------------------------
+    def latest_step(self) -> int | None:
+        steps = [int(p.name.split("_")[1]) for p in self.dir.glob("step_*")
+                 if not p.name.endswith(".tmp")]
+        return max(steps) if steps else None
+
+    def restore(self, like: Any, step: int | None = None,
+                shardings: Any = None) -> Any:
+        """Restore into the structure of `like`.  `shardings` (optional)
+        is a matching pytree of jax.sharding.Sharding for elastic
+        re-placement onto a (possibly different) mesh."""
+        self.wait()
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.dir}")
+        d = self.dir / f"step_{step}"
+        with open(d / "manifest.json") as f:
+            manifest = json.load(f)["leaves"]
+
+        flat_like, treedef = _flatten(like)
+        if set(flat_like) != set(manifest):
+            missing = set(flat_like) ^ set(manifest)
+            raise ValueError(f"checkpoint/model structure mismatch: {missing}")
+
+        flat_sh = None
+        if shardings is not None:
+            flat_sh, _ = _flatten(shardings)
+
+        out = {}
+        for k in flat_like:
+            arr = np.load(d / manifest[k]["file"])
+            if flat_sh is not None:
+                out[k] = jax.device_put(arr, flat_sh[k])
+            else:
+                out[k] = jnp.asarray(arr)
+        leaves = [out[k] for k in sorted(flat_like)]
+        ordered = [out[k] for k, _ in
+                   sorted(((k, None) for k in flat_like), key=lambda x: x[0])]
+        # rebuild in the original leaf order of `like`
+        paths, _ = jax.tree_util.tree_flatten_with_path(like)
+        keys_in_order = ["/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                         for p in path) for path, _ in paths]
+        del leaves, ordered
+        return jax.tree_util.tree_unflatten(
+            treedef, [out[k] for k in keys_in_order])

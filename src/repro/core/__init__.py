@@ -1,0 +1,28 @@
+"""The paper's contribution: guarded aggregate queries without
+materialisation — query IR, GYO join trees, 0MA classification, rule-based
+rewrites (§4), frequency-propagating executor with the FreqJoin physical
+operator (§5), and the shard_map distributed engine.
+"""
+
+from repro.core.executor import ExecStats, Executor, MaterialisationLimit
+from repro.core.hypergraph import JoinTree, build_join_tree
+from repro.core.oma import Classification, classify
+from repro.core.query import Agg, AggQuery, Atom
+from repro.core.rewrite import plan_query
+from repro.core.sql import parse_sql, SqlError
+
+__all__ = [
+    "Agg",
+    "AggQuery",
+    "Atom",
+    "Classification",
+    "classify",
+    "build_join_tree",
+    "JoinTree",
+    "plan_query",
+    "parse_sql",
+    "SqlError",
+    "Executor",
+    "ExecStats",
+    "MaterialisationLimit",
+]

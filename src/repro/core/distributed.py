@@ -1,0 +1,284 @@
+"""Distributed Yannakakis sweep: Ring-FreqJoin over the device mesh.
+
+The paper runs on Spark, whose physical layer hash-shuffles both join sides.
+A TPU mesh has no shuffle service, and all-to-all hash partitioning needs
+worst-case per-destination capacities (dynamic shapes).  We instead exploit
+the additive-semiring law the FreqJoin computes with (property-tested in
+tests/test_kernels.py):
+
+    mult(R, S₁ ⊎ S₂) = mult(R, S₁) + mult(R, S₂)
+
+so with the child relation row-sharded over the mesh, each parent shard can
+accumulate exact multipliers by visiting every child shard once around a
+ring (`lax.ppermute`), exactly like ring attention:
+
+    for step in range(axis_size):
+        mult += local_multiplier(parent_keys, child_shard)
+        child_shard = ppermute(child_shard, +1)
+
+Parent rows never move; no shuffle capacities; static shapes throughout; and
+the per-step compute (sort once, then searchsorted) overlaps with the
+ppermute of the next shard (XLA latency hiding).  The semi-join sweep is the
+same ring in the Boolean semiring (max instead of +).
+
+Multi-pod: the ring nests — a full `data`-ring per `pod` step — so
+inter-pod (DCI) hops happen once per pod, not once per shard.
+
+Final aggregates run *outside* the shard_map on row-sharded root columns;
+jnp reductions over sharded arrays let XLA insert the psum/all-gather, and
+grouping reuses the same segmented machinery.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.core.aggregates import scalar_aggregate
+from repro.core.plan import (
+    FinalAggOp,
+    FreqJoinOp,
+    MaterializeJoinOp,
+    PhysicalPlan,
+    ScanOp,
+    SemiJoinOp,
+)
+from repro.tables.table import Schema, Table, pack_keys
+
+
+def _local_multiplier(pk, ck, cf, mode: str):
+    """Exact multiplier of parent keys against ONE child shard
+    (sort + prefix-sum + searchsorted; same algorithm as kernels.ops)."""
+    order = jnp.argsort(ck)
+    cks = ck[order]
+    cfs = cf[order]
+    if mode == "any":
+        cfs = (cfs > 0).astype(cfs.dtype)
+    prefix = jnp.concatenate([jnp.zeros((1,), cfs.dtype), jnp.cumsum(cfs)])
+    lo = jnp.searchsorted(cks, pk, side="left")
+    hi = jnp.searchsorted(cks, pk, side="right")
+    return prefix[hi] - prefix[lo]
+
+
+def ring_freq_join(pk, pf, ck, cf, *, ring_axes: Sequence[str],
+                   mode: str = "sum", presort: bool = False):
+    """Inside shard_map: exact FreqJoin with the child sharded over
+    `ring_axes` (innermost axis rotates fastest).  Returns new parent freq.
+
+    presort=False — baseline: each ring step sorts the visiting shard
+        (what a naive port of the paper's sort-merge join does: Spark
+        re-sorts per shuffle partition).
+    presort=True  — beyond-paper: each shard sorts its child block ONCE
+        and the ring rotates (sorted keys, prefix sums); every step is
+        then two searchsorteds + a gather.  Saves (P−1) sorts per join —
+        see EXPERIMENTS.md §Perf (engine cell).
+    """
+    mult = lax.pvary(jnp.zeros(pk.shape, pf.dtype), tuple(ring_axes))
+
+    def rotate(x, axis):
+        size = lax.psum(1, axis)
+        perm = [(i, (i + 1) % size) for i in range(size)]
+        return lax.ppermute(x, axis, perm)
+
+    if presort:
+        order = jnp.argsort(ck)
+        cks = ck[order]
+        cfs = cf[order]
+        if mode == "any":
+            cfs = (cfs > 0).astype(pf.dtype)
+        prefix = jnp.concatenate(
+            [jnp.zeros((1,), cfs.dtype), jnp.cumsum(cfs)])
+        payload = (cks, prefix)
+
+        def local(payload_):
+            cks_, prefix_ = payload_
+            lo = jnp.searchsorted(cks_, pk, side="left")
+            hi = jnp.searchsorted(cks_, pk, side="right")
+            return (prefix_[hi] - prefix_[lo]).astype(pf.dtype)
+    else:
+        payload = (ck, cf)
+
+        def local(payload_):
+            ck_, cf_ = payload_
+            return _local_multiplier(pk, ck_, cf_, mode).astype(pf.dtype)
+
+    # nested rings: data-ring innermost (ICI), pod-ring outermost (DCI)
+    axes = list(ring_axes)
+    sizes = [lax.psum(1, a) for a in axes]
+
+    def body(carry, _):
+        payload_, mult_ = carry
+        m = local(payload_)
+        mult_ = jnp.maximum(mult_, m) if mode == "any" else mult_ + m
+        payload_ = jax.tree.map(lambda x: rotate(x, axes[-1]), payload_)
+        return (payload_, mult_), None
+
+    total_inner = sizes[-1]
+    carry = (payload, mult)
+    if len(axes) == 1:
+        carry, _ = lax.scan(body, carry, None, length=total_inner)
+    else:
+        outer_axis, outer_size = axes[0], sizes[0]
+
+        def outer_body(carry, _):
+            carry, _ = lax.scan(body, carry, None, length=total_inner)
+            payload_, mult_ = carry
+            payload_ = jax.tree.map(lambda x: rotate(x, outer_axis),
+                                    payload_)
+            return (payload_, mult_), None
+
+        carry, _ = lax.scan(outer_body, carry, None, length=outer_size)
+    _, mult = carry
+    if mode == "any":
+        mult = (mult > 0).astype(pf.dtype)
+    return pf * mult
+
+
+def allreduce_freq_join(pk, pf, ck, cf, *, ring_axes: Sequence[str],
+                        mode: str = "sum", domain: int):
+    """Beyond-paper distributed FreqJoin for dense key domains: each shard
+    scatter-adds its child block into a domain-sized accumulator, ONE psum
+    over the ring axes produces the global multiplier table, and parents
+    gather locally.  Replaces P ring steps (P ppermutes + P searchsorted
+    passes) with one all-reduce of `domain` elements — the distributed
+    twin of the local dense-domain FreqJoin (EXPERIMENTS §Perf)."""
+    cfx = (cf > 0).astype(pf.dtype) if mode == "any" else cf.astype(pf.dtype)
+    acc = jnp.zeros((domain,), pf.dtype)
+    acc = acc.at[jnp.clip(ck, 0, domain - 1)].add(
+        jnp.where((ck >= 0) & (ck < domain), cfx, 0))
+    for a in ring_axes:
+        acc = lax.psum(acc, a)
+    mult = acc[jnp.clip(pk, 0, domain - 1)]
+    mult = jnp.where((pk >= 0) & (pk < domain), mult, 0)
+    if mode == "any":
+        mult = (mult > 0).astype(pf.dtype)
+    return pf * mult
+
+
+class DistributedExecutor:
+    """Executes oma/opt_plus plans with row-sharded tables.
+
+    Tables are sharded on rows over `data_axes` (e.g. ("pod", "data") on the
+    production mesh); the bottom-up sweep runs in one shard_map program with
+    Ring-FreqJoins; final aggregation runs on the sharded root columns under
+    jit (XLA inserts the cross-shard reductions).
+    """
+
+    def __init__(self, schema: Schema, mesh: jax.sharding.Mesh,
+                 data_axes: Sequence[str] = ("data",),
+                 freq_dtype=jnp.int32, presort: bool = False,
+                 dense_domain: bool = False):
+        self.schema = schema
+        self.mesh = mesh
+        self.data_axes = tuple(data_axes)
+        self.freq_dtype = freq_dtype
+        self.presort = presort
+        self.dense_domain = dense_domain
+
+    # -- sharding helpers --------------------------------------------------
+    def row_sharding(self):
+        return jax.sharding.NamedSharding(
+            self.mesh, jax.sharding.PartitionSpec(self.data_axes))
+
+    def shard_db(self, db: dict[str, Table]) -> dict[str, Table]:
+        """Pad each table to a multiple of the ring size and shard rows."""
+        n_shards = 1
+        for a in self.data_axes:
+            n_shards *= self.mesh.shape[a]
+        out = {}
+        sh = self.row_sharding()
+        for name, t in db.items():
+            cap = ((t.capacity + n_shards - 1) // n_shards) * n_shards
+            cols = {}
+            for c, arr in t.columns.items():
+                pad = jnp.zeros((cap - t.capacity,) + arr.shape[1:], arr.dtype)
+                cols[c] = jax.device_put(jnp.concatenate([arr, pad]), sh)
+            freq = jax.device_put(
+                jnp.concatenate([t.freq,
+                                 jnp.zeros((cap - t.capacity,), t.freq.dtype)]),
+                sh)
+            out[name] = Table(cols, freq)
+        return out
+
+    # -- plan execution -----------------------------------------------------
+    def compile(self, plan: PhysicalPlan):
+        if any(isinstance(op, MaterializeJoinOp) for op in plan.ops):
+            raise ValueError("distributed execution supports the "
+                             "zero-materialisation plan classes (oma/opt_plus)")
+        schema = self.schema
+        freq_dtype = self.freq_dtype
+        data_axes = self.data_axes
+
+        def domains(alias):
+            atom = plan.tree.atoms[alias]
+            rel = schema.relations[atom.rel]
+            return {v: rel.columns[i].domain
+                    for i, v in enumerate(atom.vars)}
+
+        def key_of(alias, cols, freq, on_vars):
+            if not on_vars:
+                return jnp.zeros(freq.shape, jnp.int32), 1
+            doms = domains(alias)
+            dlist = [doms.get(v) for v in on_vars]
+            key = pack_keys([cols[v] for v in on_vars], dlist)
+            dom = None
+            if self.dense_domain and all(d is not None for d in dlist):
+                dom = 1
+                for d in dlist:
+                    dom *= d
+                if dom >= (1 << 31):
+                    dom = None
+            return key, dom
+
+        final: FinalAggOp = next(op for op in plan.ops
+                                 if isinstance(op, FinalAggOp))
+
+        def sweep(db: dict[str, Table]):
+            """Runs per-shard under shard_map; returns root cols + freq."""
+            state: dict[str, tuple[dict, jax.Array]] = {}
+            for op in plan.ops:
+                if isinstance(op, ScanOp):
+                    t = db[op.rel]
+                    if op.selection is not None:
+                        t = t.select(op.selection)
+                    atom = plan.tree.atoms[op.alias]
+                    rel = schema.relations[atom.rel]
+                    cols = {atom.vars[i]: t.columns[c]
+                            for i, c in enumerate(rel.column_names())}
+                    state[op.alias] = (cols, t.freq.astype(freq_dtype))
+                elif isinstance(op, (SemiJoinOp, FreqJoinOp)):
+                    pcols, pf = state[op.parent]
+                    ccols, cf = state[op.child]
+                    pk, _pd = key_of(op.parent, pcols, pf, op.on_vars)
+                    ck, cdom = key_of(op.child, ccols, cf, op.on_vars)
+                    mode = "any" if isinstance(op, SemiJoinOp) else "sum"
+                    if cdom is not None:
+                        pf = allreduce_freq_join(pk, pf, ck, cf,
+                                                 ring_axes=data_axes,
+                                                 mode=mode, domain=cdom)
+                    else:
+                        pf = ring_freq_join(pk, pf, ck, cf,
+                                            ring_axes=data_axes, mode=mode,
+                                            presort=self.presort)
+                    state[op.parent] = (pcols, pf)
+                elif isinstance(op, FinalAggOp):
+                    pass
+            return state[plan.tree.root]
+
+        in_specs = jax.sharding.PartitionSpec(data_axes)
+
+        def run(db: dict[str, Table]):
+            specs = jax.tree.map(lambda _: in_specs, db)
+            cols, freq = jax.shard_map(
+                sweep, mesh=self.mesh, in_specs=(specs,),
+                out_specs=in_specs)(db)
+            out = {}
+            for ag in final.aggregates:
+                out[ag.name] = scalar_aggregate(ag, cols, freq, final.dedup)
+            return out
+
+        return jax.jit(run)

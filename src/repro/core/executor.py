@@ -1,0 +1,273 @@
+"""Plan executor over the fixed-shape columnar substrate.
+
+Two execution surfaces:
+
+  * ``execute``  — eager, runs every plan class; materialising ops (ref/opt
+    baselines) use dynamic shapes the way a row engine would, and the
+    executor tracks the paper's headline metric (peak materialised/live
+    tuples) per step → Fig. 6 reproduction.
+  * ``compile``  — jits the zero-materialisation plan classes (oma /
+    opt_plus), whose dataflow is entirely static; this is the TPU path and
+    what the timing benchmarks measure.
+
+An ``oom_guard`` bounds materialisation for the baselines: exceeding it
+raises ``MaterialisationLimit`` (reported as the paper's X entries).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.aggregates import grouped_aggregate, scalar_aggregate
+from repro.core.plan import (
+    FinalAggOp,
+    FreqJoinOp,
+    MaterializeJoinOp,
+    PhysicalPlan,
+    ScanOp,
+    SemiJoinOp,
+)
+from repro.kernels import ops as kops
+from repro.tables.table import Schema, Table, pack_keys
+
+
+class MaterialisationLimit(RuntimeError):
+    """Raised when a baseline plan exceeds the allowed intermediate size
+    (the paper's 'X — out of memory' condition)."""
+
+
+@dataclasses.dataclass
+class ExecStats:
+    peak_tuples: int = 0
+    steps: list = dataclasses.field(default_factory=list)
+
+    def record(self, opname: str, n: int):
+        self.steps.append((opname, int(n)))
+        self.peak_tuples = max(self.peak_tuples, int(n))
+
+
+@dataclasses.dataclass
+class _State:
+    cols: dict[str, Any]     # var → column array
+    freq: Any                # frequency column
+
+
+class Executor:
+    def __init__(self, db: dict[str, Table], schema: Schema,
+                 freq_dtype=jnp.int32, backend: str = "xla",
+                 interpret: bool = True, oom_guard: int | None = None,
+                 dense_domain: bool = False):
+        self.db = db
+        self.schema = schema
+        self.freq_dtype = freq_dtype
+        self.backend = backend
+        self.interpret = interpret
+        self.oom_guard = oom_guard
+        # beyond-paper: sort-free scatter-add FreqJoin on dense key domains
+        self.dense_domain = dense_domain
+
+    # ------------------------------------------------------------------
+    def _domains(self, plan: PhysicalPlan, alias: str) -> dict[str, int | None]:
+        atom = plan.tree.atoms[alias]
+        rel = self.schema.relations[atom.rel]
+        return {v: rel.columns[i].domain for i, v in enumerate(atom.vars)}
+
+    def _scan(self, plan: PhysicalPlan, op: ScanOp) -> _State:
+        tab = self.db[op.rel]
+        atom = plan.tree.atoms[op.alias]
+        rel = self.schema.relations[atom.rel]
+        if op.selection is not None:
+            tab = tab.select(op.selection)
+        cols = {}
+        for i, cname in enumerate(rel.column_names()):
+            cols[atom.vars[i]] = tab.columns[cname]
+        return _State(cols, tab.freq.astype(self.freq_dtype))
+
+    def _key(self, plan: PhysicalPlan, alias: str, st: _State,
+             on_vars: tuple[str, ...]):
+        """Packed join key + (optional) dense key-domain size."""
+        if not on_vars:
+            return jnp.zeros(st.freq.shape, jnp.int32), 1
+        doms = self._domains(plan, alias)
+        dlist = [doms.get(v) for v in on_vars]
+        key = pack_keys([st.cols[v] for v in on_vars], dlist)
+        domain = None
+        if self.dense_domain and all(d is not None for d in dlist):
+            domain = 1
+            for d in dlist:
+                domain *= d
+        return key, domain
+
+    # ------------------------------------------------------------------
+    def execute(self, plan: PhysicalPlan, stats: ExecStats | None = None):
+        stats = stats if stats is not None else ExecStats()
+        state: dict[str, _State] = {}
+        results: dict[str, Any] = {}
+        for op in plan.ops:
+            if isinstance(op, ScanOp):
+                state[op.alias] = self._scan(plan, op)
+                stats.record(f"scan({op.alias})",
+                             int(jnp.sum(state[op.alias].freq > 0)))
+            elif isinstance(op, SemiJoinOp):
+                p, c = state[op.parent], state[op.child]
+                pk, pdom = self._key(plan, op.parent, p, op.on_vars)
+                ck, cdom = self._key(plan, op.child, c, op.on_vars)
+                p.freq = kops.semi_join(pk, p.freq, ck, c.freq,
+                                        backend=self.backend,
+                                        interpret=self.interpret,
+                                        domain=cdom)
+                stats.record(f"semijoin({op.parent}⋉{op.child})",
+                             int(jnp.sum(p.freq > 0)))
+            elif isinstance(op, FreqJoinOp):
+                p, c = state[op.parent], state[op.child]
+                pk, pdom = self._key(plan, op.parent, p, op.on_vars)
+                ck, cdom = self._key(plan, op.child, c, op.on_vars)
+                cf = c.freq
+                if op.pregroup and cdom is None:
+                    ck, cf, _valid = kops.group_by_sum(
+                        ck, cf, backend=self.backend,
+                        interpret=self.interpret)
+                p.freq = kops.freq_join(pk, p.freq, ck, cf,
+                                        backend=self.backend,
+                                        interpret=self.interpret,
+                                        domain=cdom)
+                stats.record(f"freqjoin({op.parent}⋉ᶠ{op.child})",
+                             int(jnp.sum(p.freq > 0)))
+            elif isinstance(op, MaterializeJoinOp):
+                state[op.parent] = self._materialize_join(plan, op, state,
+                                                          stats)
+            elif isinstance(op, FinalAggOp):
+                results = self._final_agg(plan, op, state[op.root])
+            else:  # pragma: no cover
+                raise TypeError(op)
+        results["__stats__"] = stats
+        return results
+
+    # ------------------------------------------------------------------
+    def _materialize_join(self, plan, op: MaterializeJoinOp, state, stats):
+        """Eager row-expanding join (the ref/opt baselines)."""
+        p, c = state[op.parent], state[op.child]
+        pk = np.asarray(self._key(plan, op.parent, p, op.on_vars)[0])
+        ck = np.asarray(self._key(plan, op.child, c, op.on_vars)[0])
+        pf = np.asarray(p.freq)
+        cf = np.asarray(c.freq)
+        plive = np.flatnonzero(pf > 0)
+        clive = np.flatnonzero(cf > 0)
+        pk, pf = pk[plive], pf[plive]
+        ck, cf = ck[clive], cf[clive]
+        order = np.argsort(ck, kind="stable")
+        cks, cfs = ck[order], cf[order]
+        lo = np.searchsorted(cks, pk, side="left")
+        hi = np.searchsorted(cks, pk, side="right")
+        counts = hi - lo
+        total = int(counts.sum())
+        if self.oom_guard is not None and total > self.oom_guard:
+            raise MaterialisationLimit(
+                f"join {op.parent}⋈{op.child} would materialise {total} "
+                f"tuples (> {self.oom_guard})")
+        stats.record(f"join({op.parent}⋈{op.child})", total)
+        pidx = np.repeat(np.arange(len(pk)), counts)
+        offs = np.concatenate([[0], np.cumsum(counts)[:-1]])
+        within = np.arange(total) - np.repeat(offs, counts)
+        cidx = order[np.repeat(lo, counts) + within]
+
+        out_cols: dict[str, np.ndarray] = {}
+        for v, col in p.cols.items():
+            out_cols[v] = np.asarray(col)[plive][pidx]
+        for v, col in c.cols.items():
+            if v not in out_cols:
+                out_cols[v] = np.asarray(col)[clive][cidx]
+        out_freq = pf[pidx] * cf[cidx]
+
+        if op.regroup:
+            # §4.2 Opt: group straight back to the parent's attributes
+            parent_vars = list(p.cols.keys())
+            sort_keys = tuple(out_cols[v] for v in reversed(parent_vars))
+            if sort_keys:
+                gorder = np.lexsort(sort_keys)
+            else:
+                gorder = np.arange(total)
+            freq_sorted = out_freq[gorder]
+            cols_sorted = {v: out_cols[v][gorder] for v in parent_vars}
+            if total == 0:
+                boundary = np.zeros(0, bool)
+            else:
+                boundary = np.zeros(total, bool)
+                boundary[0] = True
+                for v in parent_vars:
+                    col = cols_sorted[v]
+                    boundary[1:] |= col[1:] != col[:-1]
+            starts = np.flatnonzero(boundary)
+            sums = np.add.reduceat(freq_sorted, starts) if total else \
+                np.zeros(0, freq_sorted.dtype)
+            new_cols = {v: jnp.asarray(cols_sorted[v][starts])
+                        for v in parent_vars}
+            stats.record(f"regroup({op.parent})", len(starts))
+            return _State(new_cols, jnp.asarray(sums))
+
+        return _State({v: jnp.asarray(a) for v, a in out_cols.items()},
+                      jnp.asarray(out_freq))
+
+    # ------------------------------------------------------------------
+    def _final_agg(self, plan, op: FinalAggOp, st: _State):
+        out: dict[str, Any] = {}
+        if not op.group_by:
+            for ag in op.aggregates:
+                out[ag.name] = scalar_aggregate(ag, st.cols, st.freq,
+                                                op.dedup)
+            return out
+        doms = self._domains(plan, op.root) \
+            if op.root in plan.tree.atoms else {}
+        cols, valid = grouped_aggregate(op.group_by, op.aggregates,
+                                        st.cols, st.freq, doms, op.dedup)
+        out["groups"] = cols
+        out["valid"] = valid
+        return out
+
+    # ------------------------------------------------------------------
+    def compile(self, plan: PhysicalPlan):
+        """Jit the static plan classes (oma / opt_plus): db → aggregates."""
+        if any(isinstance(op, MaterializeJoinOp) for op in plan.ops):
+            raise ValueError(f"plan mode {plan.mode} materialises joins; "
+                             "only oma/opt_plus plans are jittable")
+
+        def run(db: dict[str, Table]):
+            inner = Executor(db, self.schema, self.freq_dtype,
+                             self.backend, self.interpret,
+                             dense_domain=self.dense_domain)
+            state: dict[str, _State] = {}
+            results: dict[str, Any] = {}
+            for op in plan.ops:
+                if isinstance(op, ScanOp):
+                    state[op.alias] = inner._scan(plan, op)
+                elif isinstance(op, SemiJoinOp):
+                    p, c = state[op.parent], state[op.child]
+                    pk, _pd = inner._key(plan, op.parent, p, op.on_vars)
+                    ck, cdom = inner._key(plan, op.child, c, op.on_vars)
+                    p.freq = kops.semi_join(pk, p.freq, ck, c.freq,
+                                            backend=self.backend,
+                                            interpret=self.interpret,
+                                            domain=cdom)
+                elif isinstance(op, FreqJoinOp):
+                    p, c = state[op.parent], state[op.child]
+                    pk, _pd = inner._key(plan, op.parent, p, op.on_vars)
+                    ck, cdom = inner._key(plan, op.child, c, op.on_vars)
+                    cf = c.freq
+                    if op.pregroup and cdom is None:
+                        ck, cf, _ = kops.group_by_sum(
+                            ck, cf, backend=self.backend,
+                            interpret=self.interpret)
+                    p.freq = kops.freq_join(pk, p.freq, ck, cf,
+                                            backend=self.backend,
+                                            interpret=self.interpret,
+                                            domain=cdom)
+                elif isinstance(op, FinalAggOp):
+                    results = inner._final_agg(plan, op, state[op.root])
+            return results
+
+        return jax.jit(run)

@@ -1,0 +1,87 @@
+"""Physical plan representation.
+
+A plan is a linear op sequence over named intermediate states (one state per
+atom alias), derived from a bottom-up join-tree traversal.  Four plan
+classes mirror the paper's experimental conditions:
+
+  ref       — materialising left-deep joins, aggregate at the end
+              (baseline; what a standard engine does)
+  opt       — §4.2 logical rewrite: materialise each parent⋈child pair but
+              immediately re-group to the parent's attrs, SUM(c_p·c_c)
+  opt_plus  — §5: the FreqJoin physical operator, zero join materialisation
+  oma       — §4.1: semi-joins only (requires the 0MA conditions)
+
+The FK/PK flag (§4.3) downgrades FreqJoins to semi-joins where sound and
+skips useless pre-grouping on unique keys.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+from repro.core.hypergraph import JoinTree
+from repro.core.query import Agg
+
+
+@dataclasses.dataclass(frozen=True)
+class ScanOp:
+    alias: str
+    rel: str
+    selection: Callable | None
+
+
+@dataclasses.dataclass(frozen=True)
+class SemiJoinOp:
+    """parent.freq ← parent.freq · [∃ live child match]  (0MA / FK-PK)."""
+
+    parent: str
+    child: str
+    on_vars: tuple[str, ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class FreqJoinOp:
+    """parent.freq ← parent.freq · Σ matching child.freq  (paper §5)."""
+
+    parent: str
+    child: str
+    on_vars: tuple[str, ...]
+    pregroup: bool  # §4.3: group child to distinct keys first
+
+
+@dataclasses.dataclass(frozen=True)
+class MaterializeJoinOp:
+    """parent ← parent ⋈ child (row expansion).  In `opt` mode the executor
+    groups straight back to the parent attrs (SUM of freq products); in
+    `ref` mode the expanded rows are kept (standard engine behaviour)."""
+
+    parent: str
+    child: str
+    on_vars: tuple[str, ...]
+    regroup: bool  # True in `opt` mode
+
+
+@dataclasses.dataclass(frozen=True)
+class FinalAggOp:
+    root: str
+    group_by: tuple[str, ...]
+    aggregates: tuple[Agg, ...]
+    dedup: bool  # oma mode: aggregate over live rows (set semantics)
+
+
+PlanOp = ScanOp | SemiJoinOp | FreqJoinOp | MaterializeJoinOp | FinalAggOp
+
+
+@dataclasses.dataclass(frozen=True)
+class PhysicalPlan:
+    mode: str
+    ops: tuple[PlanOp, ...]
+    tree: JoinTree
+    var_cols: dict[str, dict[str, str]]  # alias → {var → schema column}
+
+    def describe(self) -> str:
+        lines = [f"plan[{self.mode}] root={self.tree.root}"]
+        for op in self.ops:
+            lines.append(f"  {op}")
+        return "\n".join(lines)

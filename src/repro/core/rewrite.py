@@ -1,0 +1,113 @@
+"""The planner: rule-based rewrites of logical plans (paper §4).
+
+``plan_query`` turns an AggQuery into a PhysicalPlan:
+
+  1. GYO → join tree; classify (acyclic / guarded / set-safe / 0MA).
+  2. Re-root the tree at the guard (§4.1).
+  3. mode="auto": 0MA → semi-join sweep; guarded → FreqJoin sweep (Opt⁺);
+     unguarded/cyclic → materialising baseline (the paper's fallback: "when
+     our optimisations are not applicable, execution is not affected").
+  4. FK/PK knowledge (§4.3): an edge whose whole child subtree is FK→PK
+     carries frequency ≡ 1, so the FreqJoin degrades to a semi-join; the
+     child pre-grouping is skipped when the join key is unique in the child.
+
+Modes can be forced (benchmarks compare ref / opt / opt_plus / oma on the
+same query, mirroring the paper's experimental conditions).
+"""
+
+from __future__ import annotations
+
+from repro.core.hypergraph import build_join_tree
+from repro.core.oma import classify, edge_is_fk_pk, subtree_all_fk_pk
+from repro.core.plan import (
+    FinalAggOp,
+    FreqJoinOp,
+    MaterializeJoinOp,
+    PhysicalPlan,
+    ScanOp,
+    SemiJoinOp,
+)
+from repro.core.query import AggQuery
+from repro.tables.table import Schema
+
+
+def _var_cols(query: AggQuery, schema: Schema) -> dict[str, dict[str, str]]:
+    out: dict[str, dict[str, str]] = {}
+    for a in query.atoms:
+        cols = schema.relations[a.rel].column_names()
+        m: dict[str, str] = {}
+        for i, v in enumerate(a.vars):
+            m.setdefault(v, cols[i])
+        out[a.alias] = m
+    return out
+
+
+def _key_unique_in(schema: Schema, atom, on_vars, var_cols) -> bool:
+    cols = [var_cols[atom.alias][v] for v in on_vars]
+    return schema.relations[atom.rel].is_unique(cols)
+
+
+def plan_query(query: AggQuery, schema: Schema, mode: str = "auto",
+               use_fkpk: bool = False) -> PhysicalPlan:
+    cls = classify(query, schema)
+    if cls.tree is None:
+        raise ValueError(
+            "cyclic query: out of the paper's guarded-acyclic fragment "
+            "(would need hypertree decomposition, see paper §7)")
+    tree = cls.tree
+    var_cols = _var_cols(query, schema)
+
+    if mode == "auto":
+        if cls.is_oma:
+            mode = "oma"
+        elif cls.guarded:
+            mode = "opt_plus"
+        else:
+            mode = "ref"
+    if mode == "oma" and not cls.is_oma:
+        raise ValueError("query is not 0MA; cannot force oma mode")
+    if mode in ("opt", "opt_plus") and not cls.guarded:
+        raise ValueError("query is not guarded; frequency propagation "
+                         "would lose the aggregate attributes")
+
+    ops: list = [ScanOp(a.alias, a.rel, query.selections.get(a.alias))
+                 for a in query.atoms]
+
+    if mode == "ref":
+        # left-deep materialising joins in join-tree connectivity order so
+        # every join has a shared key (no cross products).
+        order = [u for u in reversed(tree.postorder())]  # root first
+        base = order[0]
+        for nxt in order[1:]:
+            par = tree.parent[nxt]
+            on = tree.shared_vars(par, nxt) if par is not None else ()
+            ops.append(MaterializeJoinOp(base, nxt, on, regroup=False))
+        ops.append(FinalAggOp(base, query.group_by, query.aggregates,
+                              dedup=False))
+        return PhysicalPlan("ref", tuple(ops), tree, var_cols)
+
+    # bottom-up sweep over join-tree edges (children before parents)
+    for parent, child in tree.edges_bottom_up():
+        on = tree.shared_vars(parent, child)
+        if mode == "oma":
+            ops.append(SemiJoinOp(parent, child, on))
+            continue
+        fkpk = use_fkpk and edge_is_fk_pk(tree, schema, parent, child) \
+            and subtree_all_fk_pk(tree, schema, child)
+        if fkpk:
+            # child freq ≡ 1 and ≤1 partner: FreqJoin degenerates to a
+            # semi-join (§4.3) — skip the grouping machinery entirely.
+            ops.append(SemiJoinOp(parent, child, on))
+        elif mode == "opt":
+            ops.append(MaterializeJoinOp(parent, child, on, regroup=True))
+        else:  # opt_plus
+            pregroup = not (use_fkpk and _key_unique_in(
+                schema, tree.atoms[child], on, var_cols))
+            ops.append(FreqJoinOp(parent, child, on, pregroup=pregroup))
+
+    ops.append(FinalAggOp(tree.root, query.group_by, query.aggregates,
+                          dedup=(mode == "oma")))
+    return PhysicalPlan(mode, tuple(ops), tree, var_cols)
+
+
+__all__ = ["plan_query", "classify", "build_join_tree"]

@@ -1,0 +1,19 @@
+from repro.data.relational import (
+    make_graph_db,
+    make_stats_db,
+    make_tpch_db,
+    path_query,
+    star_query,
+    tree_query,
+)
+from repro.data.lm_pipeline import TokenPipeline
+
+__all__ = [
+    "make_graph_db",
+    "make_stats_db",
+    "make_tpch_db",
+    "path_query",
+    "star_query",
+    "tree_query",
+    "TokenPipeline",
+]

@@ -1,0 +1,17 @@
+from repro.distributed.sharding import (
+    LOGICAL_RULES,
+    axis_rules,
+    current_mesh,
+    logical_spec,
+    shard,
+    use_mesh,
+)
+
+__all__ = [
+    "LOGICAL_RULES",
+    "axis_rules",
+    "current_mesh",
+    "logical_spec",
+    "shard",
+    "use_mesh",
+]

@@ -1,0 +1,220 @@
+"""Logical-axis sharding rules (MaxText/flax-partitioning style).
+
+Model code annotates tensors with *logical* axis names; a rules table maps
+them onto mesh axes.  Outside a mesh context every annotation is a no-op, so
+the same model runs on this 1-CPU container (smoke tests) and on the
+(pod, data, model) production mesh (dry-run / real TPU).
+
+Parallelism encoding (see DESIGN.md §8):
+  batch   → ("pod", "data")   DP across pods and within pods
+  fsdp    → "data"            parameter/optimizer sharding (ZeRO-3)
+  tensor  → "model"           TP: heads / ffn / vocab / expert-ffn
+  expert  → "data"            EP: expert dim of MoE weights rides the fsdp
+                              axis (tokens shuffle via all_to_all)
+  kv_seq  → "data"            SP for long-context decode KV caches
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical axis → mesh axis (None = replicated)
+LOGICAL_RULES: dict[str, object] = {
+    "batch": ("pod", "data"),
+    # Megatron-style sequence parallelism: the residual stream between
+    # blocks shards its seq dim over "model"; inside a block the seq axis
+    # is dropped automatically wherever it would collide with a tensor
+    # dim that already uses "model" (resolve_spec dedup).
+    "seq": "model",
+    "embed": ("pod", "data"),  # FSDP/ZeRO-3 weight dim — across pods too
+    "act_embed": None,      # activations keep embed unsharded (TP gathers)
+    "heads": "model",
+    "heads_fused": "model",  # h·hd fused projection dim (always divisible)
+    "kv_heads": "model",
+    "head_dim": None,
+    "kv_head_dim": "model",  # KV-cache head_dim takes "model" when the
+                             # kv-head count can't (GQA kv < 16)
+    "mlp": "model",
+    "vocab": "model",
+    "experts": ("pod", "data"),
+    "expert_mlp": "model",
+    "dispatch_embed": "model",  # d_model during MoE scatter/gather: keeps
+                                # the scatter local per shard (no replication)
+    "ssm_inner": "model",
+    "ssm_state": None,
+    "conv": None,
+    "kv_seq": ("pod", "data"),  # sequence-parallel long-context KV
+    "q_seq": "model",       # context parallelism: q positions take "model"
+                            # when the kv-head count can't split it
+    "layers": None,
+    "stack": None,
+}
+
+# Secondary claims: if a dim's PRIMARY axes were unavailable/indivisible
+# and another dim freed one of these axes, the named logical axis may
+# claim it in a second pass.  E.g. h2o-danube's d_head=120 can't take
+# "model", so its 32k KV-cache seq dim does — 256-way instead of 16-way
+# sharding (EXPERIMENTS §Dry-run footnote 4).
+SECONDARY_RULES: dict[str, tuple] = {
+    "kv_seq": ("model",),
+}
+
+_state = threading.local()
+
+
+def current_mesh() -> Mesh | None:
+    return getattr(_state, "mesh", None)
+
+
+def current_rules() -> dict:
+    return getattr(_state, "rules", LOGICAL_RULES)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Mesh | None, rules: dict | None = None):
+    prev_mesh = getattr(_state, "mesh", None)
+    prev_rules = getattr(_state, "rules", LOGICAL_RULES)
+    _state.mesh = mesh
+    _state.rules = dict(rules) if rules is not None else LOGICAL_RULES
+    try:
+        yield
+    finally:
+        _state.mesh = prev_mesh
+        _state.rules = prev_rules
+
+
+@contextlib.contextmanager
+def axis_rules(**overrides):
+    """Temporarily override logical→mesh rules (perf experiments)."""
+    rules = dict(current_rules())
+    rules.update(overrides)
+    with use_mesh(current_mesh(), rules):
+        yield
+
+
+def _mesh_axes_of(mesh: Mesh) -> set:
+    return set(mesh.axis_names)
+
+
+def resolve_spec(shape: tuple[int, ...] | None,
+                 logical_axes: tuple[str | None, ...]) -> P:
+    """Map logical axis names to a PartitionSpec under the current rules.
+
+    Robustness rules that let ONE rules table serve every arch, mesh and
+    shape cell (see DESIGN.md §8):
+
+      * mesh axes absent from the current mesh are dropped (single-pod vs
+        multi-pod share the table);
+      * a mesh axis may appear only once per spec — later duplicates are
+        dropped (e.g. decode KV caches: batch already consumed "data", so
+        kv_seq replicates; with batch=1 the batch dim frees "data" and the
+        sequence dim takes it — exactly the SP long-context layout);
+      * a dimension not divisible by its mesh-axis product is not sharded
+        on it; freed axes are greedily re-assigned to later unsharded,
+        divisible dimensions (e.g. mixtral's 8 experts can't split 16-way,
+        so the "data" axis moves onto the d_model dim — EP degrades to
+        2-D FSDP×TP instead of failing).
+
+    `shape=None` skips divisibility checks (mesh-presence and duplicate
+    rules still apply).
+    """
+    mesh = current_mesh()
+    rules = current_rules()
+    avail = _mesh_axes_of(mesh) if mesh is not None else set()
+    sizes = dict(mesh.shape) if mesh is not None else {}
+
+    def candidates(ax):
+        tgt = rules.get(ax) if ax is not None else None
+        if tgt is None:
+            return ()
+        if isinstance(tgt, tuple):
+            return tuple(t for t in tgt if t in avail)
+        return (tgt,) if tgt in avail else ()
+
+    used: set[str] = set()
+    freed: list[str] = []
+    out: list = []
+    for i, ax in enumerate(logical_axes):
+        cand = tuple(a for a in candidates(ax) if a not in used)
+        dim = shape[i] if shape is not None else None
+
+        def divides(axes):
+            if dim is None or not axes:
+                return bool(axes)
+            prod = 1
+            for a in axes:
+                prod *= sizes.get(a, 1)
+            return prod > 0 and dim % prod == 0
+
+        chosen = ()
+        if divides(cand):
+            chosen = cand
+        else:
+            for a in cand:
+                if divides((a,)):
+                    chosen = (a,)
+                    break
+            freed.extend(a for a in cand if a not in chosen)
+        used.update(chosen)
+        out.append(chosen)
+
+    # second pass: re-home freed axes onto *wildcard* dims (logical None)
+    # that are unsharded and divisible — jointly first (so e.g. mixtral's
+    # expert weights get the full pod×data FSDP product on d_model when
+    # the 8-expert dim can't take it), then singly.
+    if shape is not None:
+        freed = [a for i, a in enumerate(freed)
+                 if a not in used and a not in freed[:i]]
+
+        def try_place(axes_tuple):
+            prod = 1
+            for a in axes_tuple:
+                prod *= sizes.get(a, 1)
+            if prod <= 1:
+                return False
+            for i, cur in enumerate(out):
+                if not cur and logical_axes[i] is None \
+                        and shape[i] % prod == 0 and shape[i] > 1:
+                    out[i] = axes_tuple
+                    used.update(axes_tuple)
+                    return True
+            return False
+
+        if freed and not try_place(tuple(freed)):
+            for a in list(freed):
+                if a not in used:
+                    try_place((a,))
+
+        # third pass: SECONDARY_RULES — named dims may claim still-unused
+        # axes their primary rule didn't include (see table above)
+        for i, ax in enumerate(logical_axes):
+            if out[i] or ax not in SECONDARY_RULES:
+                continue
+            for a in SECONDARY_RULES[ax]:
+                if a in used or a not in avail:
+                    continue
+                if sizes.get(a, 1) > 1 and shape[i] % sizes.get(a, 1) == 0:
+                    out[i] = (a,)
+                    used.add(a)
+                    break
+
+    norm = [c if len(c) > 1 else (c[0] if c else None) for c in out]
+    return P(*norm)
+
+
+def logical_spec(*logical_axes: str | None, shape=None) -> P:
+    return resolve_spec(shape, logical_axes)
+
+
+def shard(x: jax.Array, *logical_axes: str | None) -> jax.Array:
+    """with_sharding_constraint under the current mesh; identity if none."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    spec = resolve_spec(tuple(x.shape), tuple(logical_axes))
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, spec))

@@ -1,0 +1,24 @@
+"""Pallas TPU kernels for the paper's physical operators.
+
+  freq_join.py   — FreqJoin (paper §5): blocked broadcast-compare sum-product
+  semi_join.py   — Boolean-semiring specialisation (0MA sweep, §4.1)
+  segment_sum.py — sorted group-by-SUM (frequency pre-grouping, §4.2/§4.3)
+  ops.py         — jit'd public wrappers, padding, XLA twins, dispatch
+  ref.py         — pure-jnp O(N·M) oracles (ground truth for tests)
+"""
+
+from repro.kernels.ops import (
+    freq_join,
+    group_by_sum,
+    segment_sum_sorted,
+    semi_join,
+    weighted_percentile,
+)
+
+__all__ = [
+    "freq_join",
+    "group_by_sum",
+    "segment_sum_sorted",
+    "semi_join",
+    "weighted_percentile",
+]

@@ -1,0 +1,114 @@
+"""FreqJoin Pallas TPU kernel (paper §5, Algorithms 1/2 adapted to TPU).
+
+The paper implements FreqJoin as a 20-line tweak to Spark's sort-merge /
+shuffled-hash joins: per parent tuple, sum the frequencies of matching child
+tuples and multiply.  Neither pointer-chasing hash probes nor data-dependent
+row loops map onto a TPU, so we adapt the *insight* (join + aggregate fused,
+zero join tuples emitted) to the TPU's blocked, vectorised model:
+
+  grid = (parent_blocks, child_blocks)              # 2-D, child inner
+  parent block  : (PB_R, 128) keys + freqs in VMEM
+  child  block  : (CB_R, 128) keys + freqs in VMEM
+  inner loop    : for each child sub-row (128 lanes), broadcast-compare
+                  against the whole parent block and accumulate
+                  acc += Σ_lane child_freq · [keys equal]
+  at the last child block: out = parent_freq · acc
+
+The comparison `parent_block[:, :, None] == child_row[None, None, :]` and the
+reduction are pure VPU work on hardware-aligned tiles; the accumulator lives
+in the (revisited) output block, exploiting TPU Pallas' sequential grid.
+No join tuple is ever materialised — the VMEM footprint is
+O(PB + CB + PB·128) per step regardless of join multiplicity.
+
+Works for any semiring-like accumulation the engine needs:
+  mode="sum"  — ℕ/ℝ semiring (COUNT/SUM/AVG/MEDIAN propagation)
+  mode="any"  — Boolean semiring (semi-join; see semi_join.py for the
+                dedicated entry point)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Block shapes: sublane × lane tiles. 8×128 is the fp32 native tile; larger
+# parent blocks amortise child traffic (see EXPERIMENTS.md §Perf).
+PARENT_BLOCK_ROWS = 8
+CHILD_BLOCK_ROWS = 8
+LANES = 128
+
+
+def _freq_join_kernel(pk_ref, pf_ref, ck_ref, cf_ref, out_ref, *, mode: str,
+                      n_child_blocks: int):
+    """One (parent-block i, child-block j) grid step."""
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    pk = pk_ref[...]                                   # (PB_R, 128)
+    acc = out_ref[...]
+
+    def body(r, acc):
+        ck_row = ck_ref[r, :]                          # (128,)
+        cf_row = cf_ref[r, :]
+        eq = pk[:, :, None] == ck_row[None, None, :]   # (PB_R, 128, 128)
+        if mode == "sum":
+            contrib = jnp.sum(
+                jnp.where(eq, cf_row[None, None, :], 0).astype(acc.dtype),
+                axis=-1,
+            )
+            return acc + contrib
+        else:  # "any": Boolean semiring — OR of live matches
+            live = eq & (cf_row[None, None, :] > 0)
+            return jnp.maximum(acc, jnp.any(live, axis=-1).astype(acc.dtype))
+
+    acc = jax.lax.fori_loop(0, ck_ref.shape[0], body, acc)
+    out_ref[...] = acc
+
+    @pl.when(j == n_child_blocks - 1)
+    def _finalise():
+        out_ref[...] = pf_ref[...] * out_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "interpret"))
+def freq_join_pallas(parent_keys, parent_freq, child_keys, child_freq,
+                     *, mode: str = "sum", interpret: bool = False):
+    """Blocked FreqJoin. Inputs must be pre-padded:
+
+    parent_keys/freq : (Np,)  Np % (PARENT_BLOCK_ROWS*128) == 0
+    child_keys/freq  : (Nc,)  Nc % (CHILD_BLOCK_ROWS*128) == 0
+    Padded child rows must carry freq 0 (so they contribute nothing);
+    padded parent rows produce garbage that the caller slices off.
+
+    Returns new parent frequencies, shape (Np,).
+    """
+    np_, nc = parent_keys.shape[0], child_keys.shape[0]
+    pb, cb = PARENT_BLOCK_ROWS * LANES, CHILD_BLOCK_ROWS * LANES
+    assert np_ % pb == 0 and nc % cb == 0, (np_, nc)
+    n_pb, n_cb = np_ // pb, nc // cb
+
+    pk2 = parent_keys.reshape(n_pb * PARENT_BLOCK_ROWS, LANES)
+    pf2 = parent_freq.reshape(n_pb * PARENT_BLOCK_ROWS, LANES)
+    ck2 = child_keys.reshape(n_cb * CHILD_BLOCK_ROWS, LANES)
+    cf2 = child_freq.reshape(n_cb * CHILD_BLOCK_ROWS, LANES)
+
+    kernel = functools.partial(_freq_join_kernel, mode=mode, n_child_blocks=n_cb)
+    out = pl.pallas_call(
+        kernel,
+        grid=(n_pb, n_cb),
+        in_specs=[
+            pl.BlockSpec((PARENT_BLOCK_ROWS, LANES), lambda i, j: (i, 0)),
+            pl.BlockSpec((PARENT_BLOCK_ROWS, LANES), lambda i, j: (i, 0)),
+            pl.BlockSpec((CHILD_BLOCK_ROWS, LANES), lambda i, j: (j, 0)),
+            pl.BlockSpec((CHILD_BLOCK_ROWS, LANES), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((PARENT_BLOCK_ROWS, LANES), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(pf2.shape, parent_freq.dtype),
+        interpret=interpret,
+    )(pk2, pf2, ck2, cf2)
+    return out.reshape(np_)

@@ -1,0 +1,183 @@
+"""Public kernel ops: padding, backend dispatch, XLA twins.
+
+Every physical operator has two interchangeable backends:
+
+  * ``"pallas"`` — the TPU kernels in freq_join.py / semi_join.py /
+    segment_sum.py (on this CPU container they run in interpret mode,
+    which executes the kernel body in Python and is used for validation);
+  * ``"xla"``    — algorithmically equivalent sort/searchsorted/segment-sum
+    formulations lowered by XLA; these are what the CPU benchmarks time and
+    what the distributed executor traces through `shard_map` (collectives
+    compose with XLA ops on every backend).
+
+Both are tested against the O(N·M) oracles in ref.py.
+"""
+
+from __future__ import annotations
+
+import functools
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import freq_join as _fj
+from repro.kernels import segment_sum as _ss
+from repro.kernels import semi_join as _sj
+
+_PARENT_PAD = _fj.PARENT_BLOCK_ROWS * _fj.LANES
+_CHILD_PAD = _fj.CHILD_BLOCK_ROWS * _fj.LANES
+
+
+def default_backend() -> str:
+    return os.environ.get("REPRO_KERNEL_BACKEND", "xla")
+
+
+def _round_up(n: int, m: int) -> int:
+    return ((n + m - 1) // m) * m
+
+
+def _pad1(a: jax.Array, n: int, fill) -> jax.Array:
+    if a.shape[0] == n:
+        return a
+    return jnp.concatenate([a, jnp.full((n - a.shape[0],), fill, a.dtype)])
+
+
+# --------------------------------------------------------------------------
+# FreqJoin
+# --------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("mode", "backend", "interpret",
+                                              "domain"))
+def freq_join(parent_keys, parent_freq, child_keys, child_freq, *,
+              mode: str = "sum", backend: str | None = None,
+              interpret: bool = True, domain: int | None = None):
+    """R ⋉^freq S — returns updated parent frequencies (paper §5).
+
+    mode="sum": ℕ-semiring (COUNT/SUM propagation);
+    mode="any": Boolean semiring (semi-join).
+
+    `domain` (beyond-paper, EXPERIMENTS §Perf): when the packed join-key
+    domain is known and dense, the sort+searchsorted pipeline collapses to
+    one scatter-add into a domain-sized accumulator plus one gather —
+    O(N) instead of O(N log N), and on TPU the exact memory pattern of an
+    embedding-gradient update (well-optimised).  Falls back to sorting when
+    the domain is unknown or too sparse to justify the accumulator.
+    """
+    backend = backend or default_backend()
+    if backend == "xla":
+        nc = child_keys.shape[0]
+        if domain is not None and domain <= max(4 * nc, 1 << 20) \
+                and domain < (1 << 31):
+            cf = child_freq
+            if mode == "any":
+                cf = (cf > 0).astype(parent_freq.dtype)
+            acc = jnp.zeros((domain,), cf.dtype)
+            acc = acc.at[child_keys].add(cf, mode="drop")
+            mult = acc[jnp.clip(parent_keys, 0, domain - 1)]
+            mult = jnp.where(
+                (parent_keys >= 0) & (parent_keys < domain), mult, 0)
+            mult = mult.astype(parent_freq.dtype)
+            if mode == "any":
+                mult = (mult > 0).astype(parent_freq.dtype)
+            return parent_freq * mult
+        order = jnp.argsort(child_keys)
+        ck = child_keys[order]
+        cf = child_freq[order]
+        if mode == "any":
+            cf = (cf > 0).astype(parent_freq.dtype)
+        zero = jnp.zeros((1,), cf.dtype)
+        prefix = jnp.concatenate([zero, jnp.cumsum(cf)])
+        lo = jnp.searchsorted(ck, parent_keys, side="left")
+        hi = jnp.searchsorted(ck, parent_keys, side="right")
+        mult = (prefix[hi] - prefix[lo]).astype(parent_freq.dtype)
+        if mode == "any":
+            mult = (mult > 0).astype(parent_freq.dtype)
+        return parent_freq * mult
+
+    np_, nc = parent_keys.shape[0], child_keys.shape[0]
+    npp, ncp = _round_up(np_, _PARENT_PAD), _round_up(nc, _CHILD_PAD)
+    pk = _pad1(parent_keys, npp, 0)
+    pf = _pad1(parent_freq, npp, 0)
+    ck = _pad1(child_keys, ncp, 0)
+    cf = _pad1(child_freq, ncp, 0)  # freq-0 padding contributes nothing
+    fn = _sj.semi_join_pallas if mode == "any" else functools.partial(
+        _fj.freq_join_pallas, mode=mode)
+    out = fn(pk, pf, ck, cf, interpret=interpret)
+    return out[:np_]
+
+
+def semi_join(parent_keys, parent_freq, child_keys, child_freq, *,
+              backend: str | None = None, interpret: bool = True,
+              domain: int | None = None):
+    """R ⋉ S over live tuples (0MA sweep step, paper §4.1)."""
+    return freq_join(parent_keys, parent_freq, child_keys, child_freq,
+                     mode="any", backend=backend, interpret=interpret,
+                     domain=domain)
+
+
+# --------------------------------------------------------------------------
+# Segment sum (sorted group-by-SUM)
+# --------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("backend", "interpret"))
+def segment_sum_sorted(sorted_keys, values, *, backend: str | None = None,
+                       interpret: bool = True):
+    """GROUP BY key, SUM(value) over key-sorted input.
+
+    Returns (sums, valid): run total at the LAST row of each run.
+    """
+    backend = backend or default_backend()
+    n = sorted_keys.shape[0]
+    if backend == "xla":
+        is_first = jnp.concatenate(
+            [jnp.ones((1,), bool), sorted_keys[1:] != sorted_keys[:-1]])
+        is_last = jnp.concatenate(
+            [sorted_keys[1:] != sorted_keys[:-1], jnp.ones((1,), bool)])
+        run_id = jnp.cumsum(is_first.astype(jnp.int32)) - 1
+        sums = jax.ops.segment_sum(values, run_id, num_segments=n)
+        out = jnp.where(is_last, jnp.take(sums, run_id), jnp.zeros((), values.dtype))
+        return out, is_last
+
+    npad = _round_up(n, _ss.LANES_WIDE)
+    # padded keys must sort last: use max-representable key
+    maxk = jnp.asarray(jnp.iinfo(sorted_keys.dtype).max, sorted_keys.dtype)
+    ks = _pad1(sorted_keys, npad, maxk)
+    vs = _pad1(values, npad, 0)
+    out, valid = _ss.segment_sum_pallas(ks, vs, interpret=interpret)
+    return out[:n], valid[:n]
+
+
+def group_by_sum(keys, values, *, backend: str | None = None,
+                 interpret: bool = True):
+    """Unsorted group-by: sort once, then segment-sum.  Returns
+    (sorted_keys, sums, valid) so downstream FreqJoins can reuse the sort."""
+    order = jnp.argsort(keys)
+    ks = keys[order]
+    vs = values[order]
+    sums, valid = segment_sum_sorted(ks, vs, backend=backend,
+                                     interpret=interpret)
+    return ks, sums, valid
+
+
+# --------------------------------------------------------------------------
+# Weighted percentile (MEDIAN rewrite, paper §4.2)
+# --------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=())
+def weighted_percentile(values, weights, q):
+    """PERCENTILE(q, A, freq) — lower-interpolation weighted percentile.
+
+    Rows with weight 0 (dead tuples) are ignored: their values are moved to
+    +inf before the sort so they never land below the target mass.
+    """
+    big = jnp.asarray(jnp.finfo(values.dtype).max if
+                      jnp.issubdtype(values.dtype, jnp.floating)
+                      else jnp.iinfo(values.dtype).max, values.dtype)
+    v = jnp.where(weights > 0, values, big)
+    order = jnp.argsort(v)
+    vs = v[order]
+    acc_dtype = jnp.float64 if jax.config.jax_enable_x64 else jnp.float32
+    ws = weights[order].astype(acc_dtype)
+    cw = jnp.cumsum(ws)
+    target = q * cw[-1]
+    idx = jnp.clip(jnp.searchsorted(cw, target, side="left"), 0,
+                   values.shape[0] - 1)
+    return vs[idx]

@@ -1,0 +1,108 @@
+"""Sorted segmented-sum Pallas TPU kernel (paper §4.2/§4.3 pre-grouping).
+
+The frequency-propagation rewrite repeatedly needs `GROUP BY key, SUM(val)`
+over a key-sorted column pair — e.g. compressing a child relation to
+(distinct key, total frequency) before a FreqJoin, and the final aggregate.
+On TPU this is a single sequential-grid pass:
+
+  * blocks of (1, LANES_WIDE) in VMEM; the TPU grid runs in order, so an
+    SMEM scratch cell carries the running sum of a run that spans blocks;
+  * run boundaries come from *shifted key columns* (prev/next) that the
+    ops.py wrapper materialises once — no cross-block peeking inside the
+    kernel;
+  * within a block, a segmented cumulative sum runs as an associative scan
+    over (value, start-flag) pairs — log-depth, vectorised.
+
+Emission convention: the run total is written at the LAST row of each run
+(valid=1 there, 0 elsewhere).  Consumers never care where a group's row
+sits, only that each distinct key appears exactly once with its total —
+rows with valid=0 carry value 0 and are dead by the engine's freq=0
+convention.
+
+This kernel is shared verbatim by the MoE layer (expert-load counting is a
+guarded COUNT(*) GROUP BY expert — see DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+LANES_WIDE = 1024  # (1, 1024) blocks: flat order == lane order
+
+
+def _seg_comb(a, b):
+    """Associative op for segmented sum: (sum, started) pairs."""
+    s1, f1 = a
+    s2, f2 = b
+    return jnp.where(f2, s2, s1 + s2), f1 | f2
+
+
+def _segment_sum_kernel(keys_ref, pkeys_ref, nkeys_ref, vals_ref,
+                        out_ref, valid_ref, carry_ref, *, n_total: int):
+    j = pl.program_id(0)
+
+    @pl.when(j == 0)
+    def _init():
+        carry_ref[0, 0] = jnp.zeros((), carry_ref.dtype)
+
+    keys = keys_ref[0, :]
+    pkeys = pkeys_ref[0, :]
+    nkeys = nkeys_ref[0, :]
+    v = vals_ref[0, :]
+
+    gpos = j * LANES_WIDE + jax.lax.broadcasted_iota(
+        jnp.int32, (1, LANES_WIDE), 1
+    )[0, :]
+    starts = (keys != pkeys) | (gpos == 0)
+    is_last = (keys != nkeys) | (gpos == n_total - 1)
+
+    seg, _ = jax.lax.associative_scan(_seg_comb, (v, starts))
+    # rows before the first run boundary continue the carried-over run
+    in_carried_run = jnp.cumsum(starts.astype(jnp.int32)) == 0
+    seg = seg + jnp.where(in_carried_run, carry_ref[0, 0], jnp.zeros((), v.dtype))
+    carry_ref[0, 0] = seg[-1]
+
+    out_ref[0, :] = jnp.where(is_last, seg, jnp.zeros((), v.dtype))
+    valid_ref[0, :] = is_last.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def segment_sum_pallas(sorted_keys, values, *, interpret: bool = False):
+    """Segmented sum over key-sorted arrays.
+
+    Contract: len % LANES_WIDE == 0; padded tail rows sort last (keys >= all
+    real keys) and carry value 0.  Returns (sums, valid) with run totals at
+    the last row of each run.
+    """
+    n = sorted_keys.shape[0]
+    assert n % LANES_WIDE == 0, n
+    n_blocks = n // LANES_WIDE
+
+    pkeys = jnp.roll(sorted_keys, 1)
+    nkeys = jnp.roll(sorted_keys, -1)
+
+    def as2d(a):
+        return a.reshape(n_blocks, LANES_WIDE)
+
+    kernel = functools.partial(_segment_sum_kernel, n_total=n)
+    out, valid = pl.pallas_call(
+        kernel,
+        grid=(n_blocks,),
+        in_specs=[pl.BlockSpec((1, LANES_WIDE), lambda j: (j, 0))] * 4,
+        out_specs=[
+            pl.BlockSpec((1, LANES_WIDE), lambda j: (j, 0)),
+            pl.BlockSpec((1, LANES_WIDE), lambda j: (j, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_blocks, LANES_WIDE), values.dtype),
+            jax.ShapeDtypeStruct((n_blocks, LANES_WIDE), jnp.int32),
+        ],
+        scratch_shapes=[pltpu.SMEM((1, 1), values.dtype)],
+        interpret=interpret,
+    )(as2d(sorted_keys), as2d(pkeys), as2d(nkeys), as2d(values))
+    return out.reshape(n), valid.reshape(n).astype(bool)

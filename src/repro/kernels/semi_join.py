@@ -1,0 +1,81 @@
+"""Semi-join Pallas TPU kernel (paper §4.1, the 0MA bottom-up sweep).
+
+The 0MA evaluation strategy reduces a whole aggregate query to a chain of
+semi-joins.  A semi-join is the Boolean-semiring specialisation of FreqJoin
+(paper §5: "in the worst case FreqJoin effectively becomes a semi-join"), so
+the kernel shares its blocked broadcast-compare structure with
+freq_join.py, accumulating with OR instead of +.
+
+out_i = parent_freq[i]  if ∃ live child row with equal key, else 0.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.freq_join import (
+    CHILD_BLOCK_ROWS,
+    LANES,
+    PARENT_BLOCK_ROWS,
+)
+
+
+def _semi_join_kernel(pk_ref, pf_ref, ck_ref, cf_ref, out_ref, *,
+                      n_child_blocks: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    pk = pk_ref[...]
+    acc = out_ref[...]
+
+    def body(r, acc):
+        ck_row = ck_ref[r, :]
+        cf_row = cf_ref[r, :]
+        eq = pk[:, :, None] == ck_row[None, None, :]
+        live = eq & (cf_row[None, None, :] > 0)
+        return jnp.maximum(acc, jnp.any(live, axis=-1).astype(acc.dtype))
+
+    acc = jax.lax.fori_loop(0, ck_ref.shape[0], body, acc)
+    out_ref[...] = acc
+
+    @pl.when(j == n_child_blocks - 1)
+    def _finalise():
+        out_ref[...] = pf_ref[...] * out_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def semi_join_pallas(parent_keys, parent_freq, child_keys, child_freq,
+                     *, interpret: bool = False):
+    """Blocked semi-join; same padding contract as freq_join_pallas."""
+    np_, nc = parent_keys.shape[0], child_keys.shape[0]
+    pb, cb = PARENT_BLOCK_ROWS * LANES, CHILD_BLOCK_ROWS * LANES
+    assert np_ % pb == 0 and nc % cb == 0, (np_, nc)
+    n_pb, n_cb = np_ // pb, nc // cb
+
+    pk2 = parent_keys.reshape(n_pb * PARENT_BLOCK_ROWS, LANES)
+    pf2 = parent_freq.reshape(n_pb * PARENT_BLOCK_ROWS, LANES)
+    ck2 = child_keys.reshape(n_cb * CHILD_BLOCK_ROWS, LANES)
+    cf2 = child_freq.reshape(n_cb * CHILD_BLOCK_ROWS, LANES)
+
+    kernel = functools.partial(_semi_join_kernel, n_child_blocks=n_cb)
+    out = pl.pallas_call(
+        kernel,
+        grid=(n_pb, n_cb),
+        in_specs=[
+            pl.BlockSpec((PARENT_BLOCK_ROWS, LANES), lambda i, j: (i, 0)),
+            pl.BlockSpec((PARENT_BLOCK_ROWS, LANES), lambda i, j: (i, 0)),
+            pl.BlockSpec((CHILD_BLOCK_ROWS, LANES), lambda i, j: (j, 0)),
+            pl.BlockSpec((CHILD_BLOCK_ROWS, LANES), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((PARENT_BLOCK_ROWS, LANES), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(pf2.shape, parent_freq.dtype),
+        interpret=interpret,
+    )(pk2, pf2, ck2, cf2)
+    return out.reshape(np_)

@@ -1,0 +1,233 @@
+import os
+
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+For each cell this produces, with ZERO device allocation:
+
+  * proof the sharding config is coherent (SPMD partitioning succeeds),
+  * compiled.memory_analysis()  — per-device bytes (does it fit HBM?),
+  * compiled.cost_analysis()    — FLOPs / bytes for the roofline,
+  * the collective schedule     — parsed from the compiled HLO text.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun                    # all
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-14b \
+        --shape train_4k --mesh multi --out results.json
+"""
+
+import argparse   # noqa: E402
+import json       # noqa: E402
+import re         # noqa: E402
+import time       # noqa: E402
+import traceback  # noqa: E402
+
+import jax        # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.configs import ARCHS, SHAPES, cells_for, get_config  # noqa: E402
+from repro.distributed.sharding import use_mesh  # noqa: E402
+from repro.launch.inputs import (  # noqa: E402
+    abstract_cache,
+    abstract_params,
+    batch_shardings,
+    input_specs,
+    to_named_shardings,
+)
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.models import decode_step, prefill  # noqa: E402
+from repro.training import init_train_state  # noqa: E402
+from repro.training.optimizer import AdamWState  # noqa: E402
+from repro.training.step import TrainState, build_train_step  # noqa: E402
+
+# HLO collective ops whose operand bytes count toward the collective term
+_COLLECTIVE_RE = re.compile(
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"[^(]*\(", re.I)
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s64": 8, "u64": 8,
+    "s32": 4, "u32": 4, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1,
+    "c64": 8, "c128": 16,
+}
+
+
+def collective_bytes_of_text(hlo: str) -> dict:
+    """Sum output-shape bytes of every collective op in an HLO dump.
+
+    Counts each textual op once — callers scale loop bodies by trip count
+    (see benchmarks/roofline.py)."""
+    out = {"all-gather": 0, "all-reduce": 0, "reduce-scatter": 0,
+           "all-to-all": 0, "collective-permute": 0}
+    counts = dict.fromkeys(out, 0)
+    for line in hlo.splitlines():
+        line = line.strip()
+        m = re.match(
+            r".*= *((?:\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)) *"
+            r"(all-gather|all-reduce|reduce-scatter|all-to-all|"
+            r"collective-permute)", line)
+        if not m:
+            continue
+        shapes = _SHAPE_RE.findall(m.group(1))
+        nbytes = 0
+        for dt, dims in shapes:
+            n = 1
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+            nbytes += n * _DTYPE_BYTES.get(dt, 4)
+        kind = m.group(2)
+        out[kind] += nbytes
+        counts[kind] += 1
+    out["ops"] = counts
+    return out
+
+
+# --------------------------------------------------------------------------
+# cell lowering
+# --------------------------------------------------------------------------
+def lower_train_cell(cfg, cell, mesh, rules=None):
+    pshapes, pspecs = abstract_params(cfg)
+    state_shapes = jax.eval_shape(init_train_state, pshapes)
+    state_specs = TrainState(
+        params=pspecs,
+        opt=AdamWState(step=(), m=pspecs, v=pspecs),
+        step=())
+    state_sh = to_named_shardings(mesh, state_specs, state_shapes, rules)
+    batch_abs = input_specs(cfg, cell)
+    batch_sh = batch_shardings(mesh, batch_abs)
+    micro = max(1, cell.global_batch // max(cell.microbatch, 1))
+    step_fn = build_train_step(cfg, microbatches=micro, remat="full")
+
+    def fn(state, batch):
+        with use_mesh(mesh, rules):
+            return step_fn(state, batch)
+
+    jitted = jax.jit(fn, in_shardings=(state_sh, batch_sh),
+                     out_shardings=(state_sh, None),
+                     donate_argnums=(0,))
+    return jitted.lower(state_shapes, batch_abs)
+
+
+def lower_prefill_cell(cfg, cell, mesh, rules=None):
+    pshapes, pspecs = abstract_params(cfg, dtype=jnp.bfloat16)
+    cache_shapes, cache_specs = abstract_cache(cfg, cell.global_batch,
+                                               cell.seq_len)
+    p_sh = to_named_shardings(mesh, pspecs, pshapes, rules)
+    c_sh = to_named_shardings(mesh, cache_specs, cache_shapes, rules)
+    batch_abs = input_specs(cfg, cell)
+    batch_sh = batch_shardings(mesh, batch_abs)
+
+    def fn(params, batch, cache):
+        with use_mesh(mesh, rules):
+            return prefill(params, cfg, batch, cache)
+
+    jitted = jax.jit(fn, in_shardings=(p_sh, batch_sh, c_sh),
+                     out_shardings=(None, c_sh), donate_argnums=(2,))
+    return jitted.lower(pshapes, batch_abs, cache_shapes)
+
+
+def lower_decode_cell(cfg, cell, mesh, rules=None):
+    pshapes, pspecs = abstract_params(cfg, dtype=jnp.bfloat16)
+    cache_shapes, cache_specs = abstract_cache(cfg, cell.global_batch,
+                                               cell.seq_len)
+    p_sh = to_named_shardings(mesh, pspecs, pshapes, rules)
+    c_sh = to_named_shardings(mesh, cache_specs, cache_shapes, rules)
+    tok_abs = input_specs(cfg, cell)
+    tok_sh = batch_shardings(mesh, tok_abs)
+
+    def fn(params, tokens, cache):
+        with use_mesh(mesh, rules):
+            return decode_step(params, cfg, tokens["tokens"], cache)
+
+    jitted = jax.jit(fn, in_shardings=(p_sh, tok_sh, c_sh),
+                     out_shardings=(None, c_sh), donate_argnums=(2,))
+    return jitted.lower(pshapes, tok_abs, cache_shapes)
+
+
+_LOWER = {"train": lower_train_cell, "prefill": lower_prefill_cell,
+          "decode": lower_decode_cell}
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, verbose: bool = True):
+    cfg = get_config(arch)
+    cell = SHAPES[shape]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    lowered = _LOWER[cell.kind](cfg, cell, mesh)
+    t1 = time.time()
+    compiled = lowered.compile()
+    t2 = time.time()
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    coll = collective_bytes_of_text(compiled.as_text())
+    n_dev = mesh.devices.size
+    result = {
+        "arch": arch, "shape": shape,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "devices": n_dev,
+        "lower_s": round(t1 - t0, 2),
+        "compile_s": round(t2 - t1, 2),
+        "flops": cost.get("flops", 0.0),
+        "bytes_accessed": cost.get("bytes accessed", 0.0),
+        "collective_bytes": {k: v for k, v in coll.items() if k != "ops"},
+        "collective_ops": coll["ops"],
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "generated_code_bytes":
+                getattr(mem, "generated_code_size_in_bytes", None),
+        },
+    }
+    if verbose:
+        print(f"[dryrun] {arch} × {shape} × {result['mesh']}: "
+              f"compile {result['compile_s']}s, "
+              f"flops={result['flops']:.3e}, "
+              f"coll={sum(result['collective_bytes'].values()):.3e} B")
+        print(f"         memory_analysis: {result['memory']}")
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=list(ARCHS))
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="dryrun_results.json")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list(ARCHS)
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    results, failures = [], []
+    for arch in archs:
+        shapes = [args.shape] if args.shape else cells_for(arch)
+        for shape in shapes:
+            if shape not in cells_for(arch):
+                print(f"[dryrun] skip {arch} × {shape} (see DESIGN.md §6)")
+                continue
+            for mp in meshes:
+                try:
+                    results.append(run_cell(arch, shape, mp))
+                except Exception as e:  # noqa: BLE001
+                    failures.append((arch, shape, mp, repr(e)))
+                    traceback.print_exc()
+    with open(args.out, "w") as f:
+        json.dump({"results": results,
+                   "failures": [list(x) for x in failures]}, f, indent=1)
+    print(f"[dryrun] {len(results)} cells OK, {len(failures)} failed "
+          f"→ {args.out}")
+    if failures:
+        for f_ in failures:
+            print("  FAIL:", f_)
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

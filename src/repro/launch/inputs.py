@@ -1,0 +1,99 @@
+"""ShapeDtypeStruct stand-ins + shardings for every (arch × shape) cell.
+
+`input_specs(cfg, cell)` returns weak-type-correct, shardable abstractions
+of every model input — no device allocation ever happens in the dry-run.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ShapeCell
+from repro.distributed.sharding import logical_spec, use_mesh
+from repro.models import decode_state_specs, init_decode_state, init_params
+from repro.models.config import ModelConfig
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell) -> dict:
+    """Abstract model inputs for one shape cell."""
+    b, s = cell.global_batch, cell.seq_len
+    if cell.kind == "train":
+        s_txt = s - (cfg.num_patches if cfg.frontend == "vision_stub" else 0)
+        out = {"tokens": sds((b, s_txt), jnp.int32),
+               "labels": sds((b, s_txt), jnp.int32)}
+        if cfg.frontend == "vision_stub":
+            out["image_embeds"] = sds((b, cfg.num_patches, cfg.d_model),
+                                      jnp.float32)
+        return out
+    if cell.kind == "prefill":
+        s_txt = s - (cfg.num_patches if cfg.frontend == "vision_stub" else 0)
+        out = {"tokens": sds((b, s_txt), jnp.int32)}
+        if cfg.frontend == "vision_stub":
+            out["image_embeds"] = sds((b, cfg.num_patches, cfg.d_model),
+                                      jnp.float32)
+        return out
+    if cell.kind == "decode":
+        return {"tokens": sds((b, 1), jnp.int32)}
+    raise ValueError(cell.kind)
+
+
+def batch_shardings(mesh, specs_tree):
+    """Batch inputs shard over ("pod","data") on dim 0 (shape-aware: a
+    batch of 1 falls back to replication)."""
+    from repro.distributed.sharding import resolve_spec
+
+    def one(x):
+        axes = ("batch",) + (None,) * (len(x.shape) - 1)
+        with use_mesh(mesh):
+            sp = resolve_spec(tuple(x.shape), axes)
+        return jax.sharding.NamedSharding(mesh, sp)
+
+    return jax.tree.map(one, specs_tree)
+
+
+def abstract_params(cfg: ModelConfig, dtype=None):
+    """(ShapeDtypeStruct tree, logical-spec tree) with zero allocation."""
+    captured = {}
+
+    def f(key):
+        p, s = init_params(key, cfg)
+        captured["specs"] = s
+        return p
+
+    shapes = jax.eval_shape(f, jax.random.PRNGKey(0))
+    if dtype is not None:
+        shapes = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(
+                x.shape,
+                dtype if jnp.issubdtype(x.dtype, jnp.floating) else x.dtype),
+            shapes)
+    return shapes, captured["specs"]
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, max_len: int):
+    """(ShapeDtypeStruct tree, logical-spec tree) for the decode state."""
+    shapes = jax.eval_shape(
+        lambda: init_decode_state(cfg, batch, max_len))
+    return shapes, decode_state_specs(cfg)
+
+
+def to_named_shardings(mesh, spec_tree, shapes_tree, rules=None):
+    """Map a logical-axis spec tree to shape-aware NamedShardings on `mesh`
+    (divisibility fallbacks live in distributed.sharding.resolve_spec)."""
+    from repro.distributed.sharding import resolve_spec
+
+    def is_spec(x):
+        return isinstance(x, tuple) and all(
+            a is None or isinstance(a, str) for a in x)
+
+    def one(axes, shape_leaf):
+        with use_mesh(mesh, rules):
+            sp = resolve_spec(tuple(shape_leaf.shape), tuple(axes))
+        return jax.sharding.NamedSharding(mesh, sp)
+
+    return jax.tree.map(one, spec_tree, shapes_tree, is_leaf=is_spec)

@@ -1,0 +1,19 @@
+from repro.models.config import ModelConfig
+from repro.models.model import (
+    decode_state_specs,
+    decode_step,
+    forward,
+    init_decode_state,
+    init_params,
+    prefill,
+)
+
+__all__ = [
+    "ModelConfig",
+    "init_params",
+    "forward",
+    "prefill",
+    "decode_step",
+    "init_decode_state",
+    "decode_state_specs",
+]

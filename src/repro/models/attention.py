@@ -1,0 +1,184 @@
+"""Attention: GQA + RoPE + optional qk-norm / sliding-window / local:global.
+
+Three execution paths, chosen by workload (see DESIGN.md §6):
+
+  * train      — dense masked attention (S×S scores per layer, recomputed in
+                 backward under the remat policy; a Pallas flash kernel is
+                 the natural TPU upgrade and is tracked in EXPERIMENTS §Perf)
+  * prefill    — chunked (flash-style online-softmax) scan over KV blocks;
+                 no gradient flows, so the scan carries are free
+  * decode     — one-token query against the KV cache; for sequence-parallel
+                 long contexts the KV is sharded over `kv_seq` and XLA
+                 reduces the partial softmax across shards
+
+GQA with n_kv_heads < n_heads computes grouped einsums; kv_heads==1 (gemma3)
+degenerates to MQA with fully replicated KV.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_rope, dense_init, rms_norm, rope
+
+NEG_INF = -1e30
+
+
+def attention_init(key, cfg: ModelConfig, stacked: int | None = None):
+    """Projection weights use the FUSED head layout [d, h·hd] so the TP
+    ("model") axis shards h·hd — which is 16-divisible for every assigned
+    arch even when the head count (9, 40, ...) is not."""
+    ks = jax.random.split(key, 6)
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    pre = (stacked,) if stacked is not None else ()
+    lead = ("layers",) if stacked is not None else ()
+    p = {
+        "wq": dense_init(ks[0], pre + (d, h * hd)),
+        "wk": dense_init(ks[1], pre + (d, kv * hd)),
+        "wv": dense_init(ks[2], pre + (d, kv * hd)),
+        "wo": dense_init(ks[3], pre + (h * hd, d), in_axis=-2),
+    }
+    s = {
+        "wq": lead + ("embed", "heads_fused"),
+        "wk": lead + ("embed", "heads_fused"),
+        "wv": lead + ("embed", "heads_fused"),
+        "wo": lead + ("heads_fused", "embed"),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.zeros(pre + (hd,))
+        p["k_norm"] = jnp.zeros(pre + (hd,))
+        s["q_norm"] = lead + ("head_dim",)
+        s["k_norm"] = lead + ("head_dim",)
+    return p, s
+
+
+def _qkv(p, cfg: ModelConfig, x, pos, dtype):
+    """Project + (qk-norm) + rope. Returns q [B,S,KV,G,hd], k,v [B,S,KV,hd]."""
+    b, s = x.shape[:2]
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    g = h // kv
+    q = jnp.einsum("bsd,de->bse", x, p["wq"].astype(dtype))
+    k = jnp.einsum("bsd,de->bse", x, p["wk"].astype(dtype))
+    v = jnp.einsum("bsd,de->bse", x, p["wv"].astype(dtype))
+    q = shard(q, "batch", "seq", "heads_fused").reshape(b, s, h, hd)
+    k = shard(k, "batch", "seq", "heads_fused").reshape(b, s, kv, hd)
+    v = shard(v, "batch", "seq", "heads_fused").reshape(b, s, kv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    sin, cos = rope(pos, hd, cfg.rope_theta)
+    q = apply_rope(q, sin, cos)
+    k = apply_rope(k, sin, cos)
+    q = q.reshape(b, s, kv, g, hd)
+    return q, k, v
+
+
+def _mask(q_pos, k_pos, window, is_global):
+    """[Sq, Sk] bool: causal ∧ (global ∨ within window)."""
+    causal = q_pos[:, None] >= k_pos[None, :]
+    if window is None:
+        return causal
+    within = (q_pos[:, None] - k_pos[None, :]) < window
+    return causal & jnp.where(is_global, True, within)
+
+
+def attention_train(p, cfg: ModelConfig, x, pos, is_global, dtype):
+    """Dense masked attention (training path)."""
+    b, s, _ = x.shape
+    hd = cfg.d_head
+    q, k, v = _qkv(p, cfg, x, pos, dtype)
+    window = (cfg.local_window if cfg.local_global_ratio
+              else cfg.sliding_window)
+    mask = _mask(pos[0], pos[0], window, is_global)
+    scores = jnp.einsum("bqhgk,bshk->bhgqs", q, k) / jnp.sqrt(hd).astype(dtype)
+    # kv_heads take "model" when divisible; otherwise q positions do
+    # (context parallelism) — resolve_spec arbitrates per shape.
+    scores = shard(scores, "batch", "kv_heads", None, "q_seq", None)
+    scores = jnp.where(mask[None, None, None], scores.astype(jnp.float32),
+                       NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(dtype)
+    out = jnp.einsum("bhgqs,bshk->bqhgk", probs, v)
+    out = out.reshape(b, s, cfg.n_heads * hd)
+    return jnp.einsum("bse,ed->bsd", out, p["wo"].astype(dtype))
+
+
+def attention_prefill(p, cfg: ModelConfig, x, pos, is_global, dtype):
+    """Chunked online-softmax attention (inference prefill; no grad)."""
+    b, s, _ = x.shape
+    hd = cfg.d_head
+    chunk = min(cfg.attn_chunk, s)
+    assert s % chunk == 0, (s, chunk)
+    q, k, v = _qkv(p, cfg, x, pos, dtype)
+    kvh, g = q.shape[2], q.shape[3]
+    window = (cfg.local_window if cfg.local_global_ratio
+              else cfg.sliding_window)
+    qp = pos[0]
+    scale = 1.0 / jnp.sqrt(hd)
+
+    def body(carry, idx):
+        m, l, acc = carry
+        kc = jax.lax.dynamic_slice_in_dim(k, idx * chunk, chunk, axis=1)
+        vc = jax.lax.dynamic_slice_in_dim(v, idx * chunk, chunk, axis=1)
+        kp = qp[0] + idx * chunk + jnp.arange(chunk)
+        msk = _mask(qp, kp, window, is_global)
+        sc = jnp.einsum("bqhgk,bshk->bhgqs", q, kc).astype(jnp.float32) * scale
+        sc = shard(sc, "batch", "kv_heads", None, "q_seq", None)
+        sc = jnp.where(msk[None, None, None], sc, NEG_INF)
+        m_new = jnp.maximum(m, sc.max(axis=-1))
+        alpha = jnp.exp(m - m_new)
+        pexp = jnp.exp(sc - m_new[..., None])
+        l_new = l * alpha + pexp.sum(axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhgqs,bshk->bhgqk", pexp.astype(dtype), vc).astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, kvh, g, s), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kvh, g, s), jnp.float32)
+    a0 = jnp.zeros((b, kvh, g, s, hd), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0),
+                                  jnp.arange(s // chunk),
+                                  unroll=True if cfg.probe_unroll else 1)
+    out = (acc / jnp.maximum(l, 1e-30)[..., None]).astype(dtype)
+    out = jnp.moveaxis(out, 3, 1).reshape(b, s, cfg.n_heads * hd)
+    return jnp.einsum("bse,ed->bsd", out, p["wo"].astype(dtype))
+
+
+def attention_decode(p, cfg: ModelConfig, x, cache_k, cache_v, pos_scalar,
+                     is_global, dtype):
+    """One new token against the KV cache.
+
+    x: [B, 1, D]; cache_k/v: [B, Smax, KV, hd] (updated in place at
+    pos_scalar).  Long-context caches may be sharded over `kv_seq`.
+    Returns (out [B,1,D], cache_k, cache_v).
+    """
+    b = x.shape[0]
+    hd = cfg.d_head
+    pos = jnp.full((b, 1), pos_scalar, jnp.int32)
+    q, k, v = _qkv(p, cfg, x, pos, dtype)
+    cache_k = jax.lax.dynamic_update_slice_in_dim(
+        cache_k, k.astype(cache_k.dtype), pos_scalar, axis=1)
+    cache_v = jax.lax.dynamic_update_slice_in_dim(
+        cache_v, v.astype(cache_v.dtype), pos_scalar, axis=1)
+    cache_k = shard(cache_k, "batch", "kv_seq", "kv_heads", "kv_head_dim")
+    cache_v = shard(cache_v, "batch", "kv_seq", "kv_heads", "kv_head_dim")
+
+    smax = cache_k.shape[1]
+    kp = jnp.arange(smax)
+    window = (cfg.local_window if cfg.local_global_ratio
+              else cfg.sliding_window)
+    valid = kp <= pos_scalar
+    if window is not None:
+        within = (pos_scalar - kp) < window
+        valid = valid & jnp.where(is_global, True, within)
+    sc = jnp.einsum("bqhgk,bshk->bhgqs", q,
+                    cache_k.astype(dtype)).astype(jnp.float32)
+    sc = sc / jnp.sqrt(hd)
+    sc = jnp.where(valid[None, None, None, None, :], sc, NEG_INF)
+    probs = jax.nn.softmax(sc, axis=-1).astype(dtype)
+    out = jnp.einsum("bhgqs,bshk->bqhgk", probs, cache_v.astype(dtype))
+    out = out.reshape(b, 1, cfg.n_heads * hd)
+    y = jnp.einsum("bse,ed->bsd", out, p["wo"].astype(dtype))
+    return y, cache_k, cache_v

@@ -1,0 +1,112 @@
+"""Shared neural layers: init helpers, RMSNorm, RoPE, SwiGLU, embeddings.
+
+Functional style: params are nested dicts of arrays; every init function
+also returns a matching tree of PartitionSpec-producing logical axis tuples
+(consumed by launch/dryrun for in_shardings).  Layer stacks store weights
+with a leading [L] axis and run under `lax.scan` (compile time O(1) in
+depth — essential for the 512-device dry-runs on this 1-core container).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+
+Params = dict[str, Any]
+Specs = dict[str, Any]  # mirrors Params with tuples of logical axis names
+
+
+def dense_init(key, shape, in_axis: int = -2, dtype=jnp.float32):
+    fan_in = shape[in_axis]
+    scale = 1.0 / jnp.sqrt(fan_in)
+    return jax.random.normal(key, shape, dtype) * scale
+
+
+def rms_norm(x, weight, eps: float):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    out = x * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + weight.astype(jnp.float32))).astype(dt)
+
+
+def rope(pos, d_head, theta):
+    """Rotary embedding tables: returns (sin, cos) of shape pos.shape+[d/2]."""
+    half = d_head // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    angles = pos.astype(jnp.float32)[..., None] * freqs
+    return jnp.sin(angles), jnp.cos(angles)
+
+
+def apply_rope(x, sin, cos):
+    """x: [..., n_heads, d_head]; sin/cos: broadcastable [..., d_head/2]."""
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    sin = sin[..., None, :]
+    cos = cos[..., None, :]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# SwiGLU MLP
+# --------------------------------------------------------------------------
+def mlp_init(key, d_model, d_ff, stacked: int | None = None):
+    ks = jax.random.split(key, 3)
+    pre = (stacked,) if stacked is not None else ()
+    p = {
+        "wi": dense_init(ks[0], pre + (d_model, d_ff)),
+        "wg": dense_init(ks[1], pre + (d_model, d_ff)),
+        "wo": dense_init(ks[2], pre + (d_ff, d_model), in_axis=-2),
+    }
+    lead = ("layers",) if stacked is not None else ()
+    s = {
+        "wi": lead + ("embed", "mlp"),
+        "wg": lead + ("embed", "mlp"),
+        "wo": lead + ("mlp", "embed"),
+    }
+    return p, s
+
+
+def mlp_apply(p, x, dtype):
+    h = jnp.einsum("bsd,df->bsf", x, p["wi"].astype(dtype))
+    g = jnp.einsum("bsd,df->bsf", x, p["wg"].astype(dtype))
+    h = jax.nn.silu(g) * h
+    h = shard(h, "batch", "seq", "mlp")
+    return jnp.einsum("bsf,fd->bsd", h, p["wo"].astype(dtype))
+
+
+# --------------------------------------------------------------------------
+# Embedding / unembedding
+# --------------------------------------------------------------------------
+def embed_init(key, vocab, d_model, tie: bool):
+    k1, k2 = jax.random.split(key)
+    p = {"embedding": jax.random.normal(k1, (vocab, d_model)) * 0.02}
+    s = {"embedding": ("vocab", "embed")}
+    if not tie:
+        p["unembed"] = dense_init(k2, (d_model, vocab))
+        s["unembed"] = ("embed", "vocab")
+    return p, s
+
+
+def embed_apply(p, tokens, dtype):
+    out = jnp.take(p["embedding"].astype(dtype), tokens, axis=0)
+    return shard(out, "batch", "seq", "act_embed")
+
+
+def unembed_apply(p, x, dtype, softcap: float = 0.0):
+    """Logits stay in the compute dtype (bf16): the loss upcasts its own
+    block-local math to f32, while the logits *gradient* — which feeds the
+    embedding-gradient all-reduce and the unembedding all-gather, both ×M
+    microbatches — moves at half the bytes (EXPERIMENTS §Perf, LM cells)."""
+    w = p.get("unembed")
+    if w is None:
+        w = p["embedding"].T
+    logits = jnp.einsum("bsd,dv->bsv", x, w.astype(dtype))
+    if softcap > 0.0:
+        logits = jnp.tanh(logits / softcap) * softcap
+    return shard(logits, "batch", "seq", "vocab")

@@ -1,0 +1,169 @@
+"""Mamba2 (SSD — state-space duality) mixer, chunked parallel form.
+
+Follows the minimal SSD formulation of the Mamba2 paper: within chunks of
+Q tokens the recurrence is evaluated as a (masked, decay-weighted)
+attention-like einsum; across chunks a `lax.scan` carries the [h, p, n]
+state.  ngroups=1 (B/C shared across heads), causal depthwise conv width 4,
+gated RMSNorm output — the zamba2 configuration.
+
+All decay exponents are differences of a cumulative sum taken *within* one
+chunk, so every `exp` argument is ≤ 0 for the masked entries: numerically
+safe in fp32 at any chunk length.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, rms_norm
+
+
+def mamba2_init(key, cfg: ModelConfig, stacked: int | None = None):
+    ks = jax.random.split(key, 4)
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    conv_dim = di + 2 * n
+    pre = (stacked,) if stacked is not None else ()
+    lead = ("layers",) if stacked is not None else ()
+    p = {
+        "in_proj": dense_init(ks[0], pre + (d, 2 * di + 2 * n + h)),
+        "conv_w": dense_init(ks[1], pre + (cfg.conv_width, conv_dim)),
+        "A_log": jnp.zeros(pre + (h,)),
+        "D": jnp.ones(pre + (h,)),
+        "dt_bias": jnp.zeros(pre + (h,)),
+        "norm_w": jnp.zeros(pre + (di,)),
+        "out_proj": dense_init(ks[2], pre + (di, d)),
+    }
+    s = {
+        "in_proj": lead + ("embed", "ssm_inner"),
+        "conv_w": lead + ("conv", "ssm_inner"),
+        "A_log": lead + (None,),
+        "D": lead + (None,),
+        "dt_bias": lead + (None,),
+        "norm_w": lead + ("ssm_inner",),
+        "out_proj": lead + ("ssm_inner", "embed"),
+    }
+    return p, s
+
+
+def _split(cfg, zxbcdt):
+    di, n, h = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    z = zxbcdt[..., :di]
+    xbc = zxbcdt[..., di:di + di + 2 * n]
+    dt = zxbcdt[..., di + di + 2 * n:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc, w):
+    """Depthwise causal conv over seq: xbc [b,s,c], w [k,c]."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc)
+    for i in range(k):
+        out = out + pad[:, i:i + xbc.shape[1], :] * w[i][None, None, :]
+    return jax.nn.silu(out)
+
+
+def _ssd_chunked(x, dA, B, C, chunk, state0=None, unroll=1):
+    """x: [b,s,h,p] (dt-scaled), dA: [b,s,h] (≤0), B,C: [b,s,n].
+
+    Sequential `lax.scan` over chunks: per-step memory is O(chunk²·h),
+    independent of sequence length.  Returns y [b,s,h,p] and final state
+    [b,h,p,n]."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    c = s // chunk
+    xr = x.reshape(b, c, chunk, h, p).transpose(1, 0, 2, 3, 4)  # [c,b,l,h,p]
+    Ar = dA.reshape(b, c, chunk, h).transpose(1, 0, 2, 3)       # [c,b,l,h]
+    Br = B.reshape(b, c, chunk, n).transpose(1, 0, 2, 3)
+    Cr = C.reshape(b, c, chunk, n).transpose(1, 0, 2, 3)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def body(S, inp):
+        xc, Ac, Bc, Cc = inp
+        cs = jnp.cumsum(Ac, axis=1)                             # [b,l,h]
+        # intra-chunk decay matrix L_ij = exp(cs_i - cs_j), i ≥ j (≤ 0 exp)
+        seg = cs[:, :, None, :] - cs[:, None, :, :]             # [b,i,j,h]
+        L = jnp.where(mask[None, :, :, None], jnp.exp(seg), 0.0)
+        scores = jnp.einsum("bin,bjn->bij", Cc, Bc)
+        y = jnp.einsum("bij,bijh,bjhp->bihp", scores, L, xc)
+        # inter-chunk contribution from the carried state
+        y = y + jnp.einsum("bin,bhpn,bih->bihp", Cc, S, jnp.exp(cs))
+        # state update
+        decay_to_end = jnp.exp(cs[:, -1:, :] - cs)              # [b,l,h]
+        S_new = S * jnp.exp(cs[:, -1])[:, :, None, None] \
+            + jnp.einsum("bln,blh,blhp->bhpn", Bc, decay_to_end, xc)
+        return S_new, y
+
+    S0 = state0 if state0 is not None else jnp.zeros((b, h, p, n),
+                                                     jnp.float32)
+    final, ys = jax.lax.scan(body, S0, (xr, Ar, Br, Cr),
+                             unroll=unroll)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s, h, p)
+    return y, final
+
+
+def mamba2_apply(p, cfg: ModelConfig, x, dtype, state=None, conv_state=None):
+    """Full-sequence mixer. Returns (y, (ssm_state, conv_state))."""
+    b, s, _ = x.shape
+    di, n, h, hp = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads, cfg.ssm_head_dim
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(dtype))
+    z, xbc_pre, dt = _split(cfg, zxbcdt)
+    xbc = _causal_conv(xbc_pre, p["conv_w"].astype(dtype))
+    xr, B, C = xbc[..., :di], xbc[..., di:di + n], xbc[..., di + n:]
+    xr = shard(xr, "batch", "seq", "ssm_inner")
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dA = dt * A                                               # [b,s,h] ≤ 0
+
+    xh = xr.reshape(b, s, h, hp).astype(jnp.float32) * dt[..., None]
+    chunk = min(cfg.ssm_chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        # state-preserving padding: zero input and zero decay (dA=0)
+        xh = jnp.pad(xh, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dA = jnp.pad(dA, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    y, final = _ssd_chunked(xh, dA, B.astype(jnp.float32),
+                            C.astype(jnp.float32), chunk,
+                            unroll=True if cfg.probe_unroll else 1)
+    y = y[:, :s] + p["D"].astype(jnp.float32)[None, None, :, None] \
+        * xr.reshape(b, s, h, hp).astype(jnp.float32)
+    y = y.reshape(b, s, di).astype(dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(dtype))
+    new_conv = xbc_pre[:, -(cfg.conv_width - 1):, :] \
+        if s >= cfg.conv_width - 1 else None
+    return out, (final, new_conv)
+
+
+def mamba2_decode(p, cfg: ModelConfig, x, ssm_state, conv_state, dtype):
+    """One-token step. x: [b,1,d]; ssm_state: [b,h,p,n];
+    conv_state: [b, conv_width-1, conv_dim]."""
+    b = x.shape[0]
+    di, n, h, hp = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads, cfg.ssm_head_dim
+    zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"].astype(dtype))
+    z, xbc, dt = _split(cfg, zxbcdt)
+    # causal conv via the rolling state
+    window = jnp.concatenate([conv_state, xbc], axis=1)       # [b,k,c]
+    w = p["conv_w"].astype(dtype)
+    conv_out = jnp.einsum("bkc,kc->bc", window, w)[:, None, :]
+    xbc1 = jax.nn.silu(conv_out)
+    new_conv_state = window[:, 1:, :]
+    xr, B, C = xbc1[..., :di], xbc1[..., di:di + n], xbc1[..., di + n:]
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # [b,h]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    decay = jnp.exp(dt1 * A)                                  # [b,h]
+    xh = xr[:, 0].reshape(b, h, hp).astype(jnp.float32) * dt1[..., None]
+    outer = jnp.einsum("bhp,bn->bhpn", xh, B[:, 0].astype(jnp.float32))
+    new_state = ssm_state * decay[..., None, None] + outer
+    y = jnp.einsum("bhpn,bn->bhp", new_state, C[:, 0].astype(jnp.float32))
+    y = y + p["D"].astype(jnp.float32)[None, :, None] \
+        * xr[:, 0].reshape(b, h, hp).astype(jnp.float32)
+    y = y.reshape(b, 1, di).astype(dtype)
+    y = rms_norm(y * jax.nn.silu(z), p["norm_w"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"].astype(dtype))
+    return out, (new_state, new_conv_state)

@@ -1,0 +1,481 @@
+"""Model assembly: init / forward / prefill / decode for every family.
+
+One decoder skeleton, pluggable mixers:
+
+  dense   — [LN → attention → LN → SwiGLU] × L, scanned
+  moe     — [LN → attention → LN → MoE(+shared)] × L, scanned
+  rwkv6   — [RWKV block (time-mix + channel-mix)] × L, scanned
+  mamba2  — [LN → Mamba2 mixer] × L, scanned
+  hybrid  — zamba2: groups of `shared_attn_every` Mamba2 layers, each group
+            preceded by ONE weight-shared attention+MLP block (7 cache
+            instances for 38 layers)
+
+Homogeneous stacks run under `lax.scan` over stacked [L, ...] weights so
+HLO size (and 512-device dry-run compile time) is depth-independent.
+Training wraps the scan body in `jax.checkpoint` (policy from the caller).
+
+Decode state is a pytree of stacked per-layer caches updated inside the
+same scan. `prefill` returns the populated caches for every family.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import shard
+from repro.models import attention as attn
+from repro.models import mamba2 as m2
+from repro.models import moe as moe_mod
+from repro.models import rwkv6 as rk
+from repro.models.config import ModelConfig
+from repro.models.layers import (
+    embed_apply,
+    embed_init,
+    mlp_apply,
+    mlp_init,
+    rms_norm,
+    unembed_apply,
+)
+
+REMAT_POLICIES = {
+    "none": None,
+    "full": jax.checkpoint_policies.nothing_saveable,
+    "dots": jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+}
+
+
+# ==========================================================================
+# init
+# ==========================================================================
+def init_params(key, cfg: ModelConfig):
+    """Returns (params, specs): specs mirror params with logical-axis tuples."""
+    keys = jax.random.split(key, 8)
+    p: dict[str, Any] = {}
+    s: dict[str, Any] = {}
+    p["embed"], s["embed"] = embed_init(keys[0], cfg.vocab_size, cfg.d_model,
+                                        cfg.tie_embeddings)
+    p["final_norm"] = jnp.zeros((cfg.d_model,))
+    s["final_norm"] = (None,)
+    L = cfg.n_layers
+
+    if cfg.family in ("dense", "moe"):
+        ap, asx = attn.attention_init(keys[1], cfg, stacked=L)
+        if cfg.family == "moe":
+            mp, msx = moe_mod.moe_init(keys[2], cfg, stacked=L)
+        else:
+            mp, msx = mlp_init(keys[2], cfg.d_model, cfg.d_ff, stacked=L)
+        p["layers"] = {"attn": ap, "mlp": mp,
+                       "ln1": jnp.zeros((L, cfg.d_model)),
+                       "ln2": jnp.zeros((L, cfg.d_model))}
+        s["layers"] = {"attn": asx, "mlp": msx,
+                       "ln1": ("layers", None), "ln2": ("layers", None)}
+    elif cfg.family == "rwkv6":
+        mp, msx = rk.rwkv6_init(keys[1], cfg, stacked=L)
+        p["layers"] = {"mixer": mp}
+        s["layers"] = {"mixer": msx}
+    elif cfg.family == "mamba2":
+        mp, msx = m2.mamba2_init(keys[1], cfg, stacked=L)
+        p["layers"] = {"mixer": mp, "ln1": jnp.zeros((L, cfg.d_model))}
+        s["layers"] = {"mixer": msx, "ln1": ("layers", None)}
+    elif cfg.family == "hybrid":
+        mp, msx = m2.mamba2_init(keys[1], cfg, stacked=L)
+        p["layers"] = {"mixer": mp, "ln1": jnp.zeros((L, cfg.d_model))}
+        s["layers"] = {"mixer": msx, "ln1": ("layers", None)}
+        ap, asx = attn.attention_init(keys[2], cfg, stacked=None)
+        fp, fsx = mlp_init(keys[3], cfg.d_model, cfg.d_ff, stacked=None)
+        p["shared"] = {"attn": ap, "mlp": fp,
+                       "ln1": jnp.zeros((cfg.d_model,)),
+                       "ln2": jnp.zeros((cfg.d_model,))}
+        s["shared"] = {"attn": asx, "mlp": fsx,
+                       "ln1": (None,), "ln2": (None,)}
+    else:
+        raise ValueError(cfg.family)
+    return p, s
+
+
+def _is_global_pattern(cfg: ModelConfig) -> jnp.ndarray:
+    """Per-layer bool: layer uses global (non-windowed) attention."""
+    L = cfg.n_layers
+    if cfg.local_global_ratio:
+        # gemma3: every (ratio+1)-th layer is global
+        idx = jnp.arange(L)
+        return (idx % (cfg.local_global_ratio + 1)) == cfg.local_global_ratio
+    if cfg.sliding_window:
+        return jnp.zeros((L,), bool)     # all windowed (SWA)
+    return jnp.ones((L,), bool)          # all global
+
+
+# ==========================================================================
+# embedding / head shared by all paths
+# ==========================================================================
+def _embed_inputs(params, cfg: ModelConfig, batch, dtype):
+    x = embed_apply(params["embed"], batch["tokens"], dtype)
+    if cfg.frontend == "vision_stub":
+        img = batch["image_embeds"].astype(dtype)
+        x = jnp.concatenate([img, x], axis=1)
+    if getattr(cfg, "embed_scale", False) or cfg.name.startswith("gemma"):
+        x = x * jnp.sqrt(jnp.asarray(cfg.d_model, jnp.float32)).astype(dtype)
+    return shard(x, "batch", "seq", "act_embed")
+
+
+def _head(params, cfg: ModelConfig, x, dtype):
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return unembed_apply(params["embed"], x, dtype, cfg.logit_softcap)
+
+
+# ==========================================================================
+# transformer stacks (dense / moe)
+# ==========================================================================
+def _dense_stack(params, cfg, x, pos, mode, cache, policy):
+    dtype = cfg.compute_dtype
+    unroll = True if cfg.probe_unroll else 1
+    is_global = _is_global_pattern(cfg)
+    zero_aux = {"load_balance": jnp.zeros((), jnp.float32),
+                "router_z": jnp.zeros((), jnp.float32),
+                "dropped_frac": jnp.zeros((), jnp.float32)}
+
+    def block(x, lp, ig, ck, cv, pos_scalar):
+        h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+        if mode == "train":
+            a = attn.attention_train(lp["attn"], cfg, h, pos, ig, dtype)
+        elif mode == "prefill":
+            a = attn.attention_prefill(lp["attn"], cfg, h, pos, ig, dtype)
+            # write the whole prefix into the cache
+            q, k, v = attn._qkv(lp["attn"], cfg, h, pos, dtype)
+            ck = jax.lax.dynamic_update_slice_in_dim(
+                ck, k.astype(ck.dtype), 0, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(
+                cv, v.astype(cv.dtype), 0, axis=1)
+        else:  # decode
+            a, ck, cv = attn.attention_decode(lp["attn"], cfg, h, ck, cv,
+                                              pos_scalar, ig, dtype)
+        x = x + a
+        h2 = rms_norm(x, lp["ln2"], cfg.norm_eps)
+        if cfg.family == "moe":
+            y, aux = moe_mod.moe_apply(lp["mlp"], cfg, h2, dtype)
+        else:
+            y, aux = mlp_apply(lp["mlp"], h2, dtype), zero_aux
+        return x + y, ck, cv, aux
+
+    if mode == "train":
+        def body(carry, xs):
+            x, aux_acc = carry
+            lp, ig = xs
+            x, _, _, aux = block(x, lp, ig, None, None, None)
+            aux_acc = jax.tree.map(lambda a, b: a + b, aux_acc, aux)
+            return (x, aux_acc), None
+
+        if policy is not None:
+            body = jax.checkpoint(body, policy=policy)
+        (x, aux), _ = jax.lax.scan(body, (x, zero_aux),
+                                   (params["layers"], is_global),
+                                   unroll=unroll)
+        return x, None, aux
+
+    # prefill / decode: caches ride the scan as xs/ys
+    pos_scalar = cache["pos"]
+
+    def body(x, xs):
+        lp, ig, ck, cv = xs
+        x, ck, cv, _aux = block(x, lp, ig, ck, cv, pos_scalar)
+        return x, (ck, cv)
+
+    x, (ck, cv) = jax.lax.scan(body, x,
+                               (params["layers"], is_global,
+                                cache["k"], cache["v"]),
+                               unroll=unroll)
+    new_len = pos_scalar + x.shape[1]
+    new_cache = {"k": ck, "v": cv, "pos": new_len}
+    return x, new_cache, zero_aux
+
+
+# ==========================================================================
+# rwkv6 / mamba2 stacks
+# ==========================================================================
+def _rwkv_stack(params, cfg, x, pos, mode, cache, policy):
+    dtype = cfg.compute_dtype
+    unroll = True if cfg.probe_unroll else 1
+
+    if mode == "decode":
+        def body(x, xs):
+            lp, wkv, tok, ffn = xs
+            y, (wkv, tok, ffn) = rk.rwkv6_decode(lp["mixer"], cfg, x,
+                                                 (wkv, tok, ffn), dtype)
+            return y, (wkv, tok, ffn)
+
+        x, (wkv, tok, ffn) = jax.lax.scan(
+            body, x, (params["layers"], cache["wkv"], cache["tok"],
+                      cache["ffn"]), unroll=unroll)
+        return x, {"wkv": wkv, "tok": tok, "ffn": ffn,
+                   "pos": cache["pos"] + 1}, None
+
+    def body(x, xs):
+        lp = xs
+        y, carry = rk.rwkv6_apply(lp["mixer"], cfg, x, dtype, state=None)
+        return y, carry
+
+    if mode == "train" and policy is not None:
+        body = jax.checkpoint(body, policy=policy)
+    x, (wkv, tok, ffn) = jax.lax.scan(body, x, params["layers"],
+                                      unroll=unroll)
+    new_cache = None
+    if mode == "prefill":
+        new_cache = {"wkv": wkv, "tok": tok, "ffn": ffn,
+                     "pos": (cache["pos"] if cache else 0) + x.shape[1]}
+    return x, new_cache, None
+
+
+def _mamba_block(lp, cfg, x, mode, ssm, conv, dtype):
+    h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+    if mode == "decode":
+        y, (ssm, conv) = m2.mamba2_decode(lp["mixer"], cfg, h, ssm, conv,
+                                          dtype)
+    else:
+        y, (ssm, conv) = m2.mamba2_apply(lp["mixer"], cfg, h, dtype)
+    return x + y, ssm, conv
+
+
+def _mamba_stack(params, cfg, x, pos, mode, cache, policy):
+    dtype = cfg.compute_dtype
+    unroll = True if cfg.probe_unroll else 1
+
+    if mode == "decode":
+        def body(x, xs):
+            lp, ssm, conv = xs
+            x, ssm, conv = _mamba_block(lp, cfg, x, mode, ssm, conv, dtype)
+            return x, (ssm, conv)
+
+        x, (ssm, conv) = jax.lax.scan(
+            body, x, (params["layers"], cache["ssm"], cache["conv"]),
+            unroll=unroll)
+        return x, {"ssm": ssm, "conv": conv, "pos": cache["pos"] + 1}, None
+
+    def body(x, xs):
+        lp = xs
+        x, ssm, conv = _mamba_block(lp, cfg, x, mode, None, None, dtype)
+        return x, (ssm, conv)
+
+    if mode == "train" and policy is not None:
+        body = jax.checkpoint(body, policy=policy)
+    x, (ssm, conv) = jax.lax.scan(body, x, params["layers"],
+                                  unroll=unroll)
+    new_cache = None
+    if mode == "prefill":
+        new_cache = {"ssm": ssm, "conv": conv,
+                     "pos": (cache["pos"] if cache else 0) + x.shape[1]}
+    return x, new_cache, None
+
+
+# ==========================================================================
+# hybrid (zamba2) stack
+# ==========================================================================
+def _hybrid_groups(cfg: ModelConfig):
+    every = cfg.shared_attn_every
+    L = cfg.n_layers
+    sizes = []
+    done = 0
+    while done < L:
+        g = min(every, L - done)
+        sizes.append(g)
+        done += g
+    return sizes  # one shared-attn application before each group
+
+
+def _hybrid_stack(params, cfg, x, pos, mode, cache, policy):
+    dtype = cfg.compute_dtype
+    unroll = True if cfg.probe_unroll else 1
+    sizes = _hybrid_groups(cfg)
+    sp = params["shared"]
+    off = 0
+    new_k, new_v, new_ssm, new_conv = [], [], [], []
+    pos_scalar = cache["pos"] if cache is not None else None
+
+    for gi, gsz in enumerate(sizes):
+        # ---- shared attention + MLP block (weights shared, cache per app)
+        h = rms_norm(x, sp["ln1"], cfg.norm_eps)
+        if mode == "train":
+            a = attn.attention_train(sp["attn"], cfg, h, pos, True, dtype)
+        elif mode == "prefill":
+            a = attn.attention_prefill(sp["attn"], cfg, h, pos, True, dtype)
+            q, k, v = attn._qkv(sp["attn"], cfg, h, pos, dtype)
+            ck = jax.lax.dynamic_update_slice_in_dim(
+                cache["k"][gi], k.astype(cache["k"].dtype), 0, axis=1)
+            cv = jax.lax.dynamic_update_slice_in_dim(
+                cache["v"][gi], v.astype(cache["v"].dtype), 0, axis=1)
+            new_k.append(ck)
+            new_v.append(cv)
+        else:
+            a, ck, cv = attn.attention_decode(
+                sp["attn"], cfg, h, cache["k"][gi], cache["v"][gi],
+                pos_scalar, True, dtype)
+            new_k.append(ck)
+            new_v.append(cv)
+        x = x + a
+        h2 = rms_norm(x, sp["ln2"], cfg.norm_eps)
+        x = x + mlp_apply(sp["mlp"], h2, dtype)
+
+        # ---- group of mamba2 layers
+        lp_slice = jax.tree.map(lambda a: a[off:off + gsz], params["layers"])
+
+        if mode == "decode":
+            def body(x, xs):
+                lp, ssm, conv = xs
+                x, ssm, conv = _mamba_block(lp, cfg, x, mode, ssm, conv,
+                                            dtype)
+                return x, (ssm, conv)
+
+            x, (ssm, conv) = jax.lax.scan(
+                body, x, (lp_slice, cache["ssm"][off:off + gsz],
+                          cache["conv"][off:off + gsz]), unroll=unroll)
+            new_ssm.append(ssm)
+            new_conv.append(conv)
+        else:
+            def body(x, xs):
+                x, ssm, conv = _mamba_block(xs, cfg, x, mode, None, None,
+                                            dtype)
+                return x, (ssm, conv)
+
+            b = jax.checkpoint(body, policy=policy) \
+                if (mode == "train" and policy is not None) else body
+            x, (ssm, conv) = jax.lax.scan(b, x, lp_slice, unroll=unroll)
+            if mode == "prefill":
+                new_ssm.append(ssm)
+                new_conv.append(conv)
+        off += gsz
+
+    new_cache = None
+    if mode in ("prefill", "decode"):
+        base = pos_scalar if pos_scalar is not None else 0
+        step = 1 if mode == "decode" else x.shape[1]
+        if not sizes:  # L=0 probe models: pass the cache through
+            new_cache = dict(cache, pos=base + step)
+        else:
+            new_cache = {
+                "k": jnp.stack(new_k), "v": jnp.stack(new_v),
+                "ssm": jnp.concatenate(new_ssm),
+                "conv": jnp.concatenate(new_conv),
+                "pos": base + step,
+            }
+    return x, new_cache, None
+
+
+_STACKS = {
+    "dense": _dense_stack,
+    "moe": _dense_stack,
+    "rwkv6": _rwkv_stack,
+    "mamba2": _mamba_stack,
+    "hybrid": _hybrid_stack,
+}
+
+
+# ==========================================================================
+# public API
+# ==========================================================================
+def forward(params, cfg: ModelConfig, batch, *, remat: str = "none"):
+    """Training/eval forward over a full sequence. Returns (logits, aux)."""
+    dtype = cfg.compute_dtype
+    x = _embed_inputs(params, cfg, batch, dtype)
+    b, s = x.shape[:2]
+    pos = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    policy = REMAT_POLICIES[remat]
+    x, _, aux = _STACKS[cfg.family](params, cfg, x, pos, "train", None,
+                                    policy)
+    logits = _head(params, cfg, x, dtype)
+    return logits, aux
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int):
+    """Fresh decode caches (stacked over layers / app instances)."""
+    L = cfg.n_layers
+    kvd = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    if cfg.family in ("dense", "moe"):
+        kvh, hd = cfg.n_kv_heads, cfg.d_head
+        return {
+            "k": jnp.zeros((L, batch, max_len, kvh, hd), kvd),
+            "v": jnp.zeros((L, batch, max_len, kvh, hd), kvd),
+            "pos": jnp.zeros((), jnp.int32),
+        }
+    if cfg.family == "rwkv6":
+        hd = cfg.ssm_head_dim
+        h = cfg.d_model // hd
+        return {
+            "wkv": jnp.zeros((L, batch, h, hd, hd), jnp.float32),
+            "tok": jnp.zeros((L, batch, cfg.d_model), kvd),
+            "ffn": jnp.zeros((L, batch, cfg.d_model), kvd),
+            "pos": jnp.zeros((), jnp.int32),
+        }
+    if cfg.family == "mamba2":
+        return {
+            "ssm": jnp.zeros((L, batch, cfg.n_ssm_heads, cfg.ssm_head_dim,
+                              cfg.ssm_state), jnp.float32),
+            "conv": jnp.zeros((L, batch, cfg.conv_width - 1,
+                               cfg.d_inner + 2 * cfg.ssm_state), kvd),
+            "pos": jnp.zeros((), jnp.int32),
+        }
+    if cfg.family == "hybrid":
+        n_apps = len(_hybrid_groups(cfg))
+        kvh, hd = cfg.n_kv_heads, cfg.d_head
+        return {
+            "k": jnp.zeros((n_apps, batch, max_len, kvh, hd), kvd),
+            "v": jnp.zeros((n_apps, batch, max_len, kvh, hd), kvd),
+            "ssm": jnp.zeros((L, batch, cfg.n_ssm_heads, cfg.ssm_head_dim,
+                              cfg.ssm_state), jnp.float32),
+            "conv": jnp.zeros((L, batch, cfg.conv_width - 1,
+                               cfg.d_inner + 2 * cfg.ssm_state), kvd),
+            "pos": jnp.zeros((), jnp.int32),
+        }
+    raise ValueError(cfg.family)
+
+
+def decode_state_specs(cfg: ModelConfig):
+    """Logical-axis annotations for the decode caches (for in_shardings)."""
+    if cfg.family in ("dense", "moe"):
+        return {"k": ("stack", "batch", "kv_seq", "kv_heads", "kv_head_dim"),
+                "v": ("stack", "batch", "kv_seq", "kv_heads", "kv_head_dim"),
+                "pos": ()}
+    if cfg.family == "rwkv6":
+        return {"wkv": ("stack", "batch", "heads", None, None),
+                "tok": ("stack", "batch", None),
+                "ffn": ("stack", "batch", None),
+                "pos": ()}
+    if cfg.family == "mamba2":
+        return {"ssm": ("stack", "batch", "heads", None, None),
+                "conv": ("stack", "batch", None, "ssm_inner"),
+                "pos": ()}
+    if cfg.family == "hybrid":
+        return {"k": ("stack", "batch", "kv_seq", "kv_heads", "head_dim"),
+                "v": ("stack", "batch", "kv_seq", "kv_heads", "head_dim"),
+                "ssm": ("stack", "batch", "heads", None, None),
+                "conv": ("stack", "batch", None, "ssm_inner"),
+                "pos": ()}
+    raise ValueError(cfg.family)
+
+
+def prefill(params, cfg: ModelConfig, batch, cache):
+    """Run the prompt through the model, populating `cache`.
+    Returns (last-token logits [B, V], cache)."""
+    dtype = cfg.compute_dtype
+    x = _embed_inputs(params, cfg, batch, dtype)
+    b, s = x.shape[:2]
+    pos = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    x, new_cache, _ = _STACKS[cfg.family](params, cfg, x, pos, "prefill",
+                                          cache, None)
+    logits = _head(params, cfg, x[:, -1:, :], dtype)
+    return logits[:, 0], new_cache
+
+
+def decode_step(params, cfg: ModelConfig, tokens, cache):
+    """One decoding step. tokens: [B, 1]. Returns (logits [B, V], cache)."""
+    dtype = cfg.compute_dtype
+    x = embed_apply(params["embed"], tokens, dtype)
+    if getattr(cfg, "embed_scale", False) or cfg.name.startswith("gemma"):
+        x = x * jnp.sqrt(jnp.asarray(cfg.d_model, jnp.float32)).astype(dtype)
+    pos = cache["pos"]
+    x, new_cache, _ = _STACKS[cfg.family](params, cfg, x, None, "decode",
+                                          cache, None)
+    logits = _head(params, cfg, x, dtype)
+    return logits[:, 0], new_cache

@@ -1,0 +1,106 @@
+"""Batched serving: prefill + jitted decode loop with slot management.
+
+`ServeEngine` owns the per-slot KV/SSM caches for a fixed batch of request
+slots (static shapes).  Requests of different lengths right-pad into slots;
+finished slots are refilled (continuous-batching-lite: the decode step is
+one jitted program, slot refill happens at step boundaries).  `serve_step`
+— one token for every live slot — is the unit the dry-run lowers for the
+decode_* shape cells.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import (
+    decode_step,
+    forward,
+    init_decode_state,
+    prefill,
+)
+from repro.models.config import ModelConfig
+
+
+def greedy_generate(params, cfg: ModelConfig, prompts: np.ndarray,
+                    max_new_tokens: int, extra: dict | None = None):
+    """prompts: [B, S_prompt] int32.  Returns [B, max_new_tokens]."""
+    b, s = prompts.shape
+    cache = init_decode_state(cfg, batch=b, max_len=s + max_new_tokens)
+    batch = {"tokens": jnp.asarray(prompts)}
+    if extra:
+        batch.update(extra)
+    logits, cache = jax.jit(prefill, static_argnames=("cfg",))(
+        params, cfg, batch, cache)
+    step = jax.jit(decode_step, static_argnames=("cfg",))
+    toks = []
+    cur = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+    for _ in range(max_new_tokens):
+        toks.append(cur)
+        logits, cache = step(params, cfg, cur, cache)
+        cur = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+    return np.concatenate([np.asarray(t) for t in toks], axis=1)
+
+
+@dataclasses.dataclass
+class ServeEngine:
+    """Fixed-slot, wave-synchronous batched serving.
+
+    Requests queue up; a *wave* pads them to a common prompt length, runs
+    one batched prefill and then jitted single-token decode steps until
+    every slot finishes (EOS or budget).  The decode program — one token
+    for `n_slots` live slots — is exactly the dry-run's `serve_step` unit.
+    (Per-slot asynchronous positions would need scatter-based cache writes;
+    tracked as future work in DESIGN.md.)
+    """
+
+    params: Any
+    cfg: ModelConfig
+    n_slots: int
+    max_len: int
+
+    def __post_init__(self):
+        self._decode = jax.jit(decode_step, static_argnames=("cfg",))
+        self._prefill = jax.jit(prefill, static_argnames=("cfg",))
+        self._queue: list[tuple[int, np.ndarray]] = []
+        self._next_req = 0
+
+    def submit(self, prompt: np.ndarray) -> int:
+        rid = self._next_req
+        self._next_req += 1
+        self._queue.append((rid, np.asarray(prompt, np.int32)))
+        return rid
+
+    def run_wave(self, eos: int | None = None, max_tokens: int = 64):
+        """Serve up to n_slots queued requests to completion.
+        Returns {request_id: generated tokens}."""
+        if not self._queue:
+            return {}
+        wave = self._queue[:self.n_slots]
+        self._queue = self._queue[self.n_slots:]
+        plen = max(len(p) for _, p in wave)
+        toks = np.zeros((self.n_slots, plen), np.int32)
+        for i, (_, p) in enumerate(wave):
+            toks[i, plen - len(p):] = p  # left-pad into the slot
+        cache = init_decode_state(self.cfg, self.n_slots, self.max_len)
+        logits, cache = self._prefill(self.params, self.cfg,
+                                      {"tokens": jnp.asarray(toks)}, cache)
+        cur = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        outs: dict[int, list[int]] = {rid: [] for rid, _ in wave}
+        live = np.ones(len(wave), bool)
+        for _ in range(max_tokens):
+            for i, (rid, _) in enumerate(wave):
+                if live[i]:
+                    t = int(cur[i, 0])
+                    outs[rid].append(t)
+                    if eos is not None and t == eos:
+                        live[i] = False
+            if not live.any():
+                break
+            logits, cache = self._decode(self.params, self.cfg, cur, cache)
+            cur = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        return outs

@@ -1,0 +1,17 @@
+from repro.tables.table import (
+    ColumnMeta,
+    ForeignKey,
+    RelSchema,
+    Schema,
+    Table,
+    pack_keys,
+)
+
+__all__ = [
+    "ColumnMeta",
+    "ForeignKey",
+    "RelSchema",
+    "Schema",
+    "Table",
+    "pack_keys",
+]

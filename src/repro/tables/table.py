@@ -1,0 +1,185 @@
+"""Fixed-shape columnar table substrate.
+
+JAX requires static shapes, so relations never shrink or grow: a ``Table``
+has a fixed ``capacity`` and carries a *frequency* column ``freq``.  A live
+tuple has ``freq > 0``; selections and semi-joins zero frequencies instead of
+deleting rows; the FreqJoin operator multiplies them.  This is exactly the
+paper's K-relation view (semiring annotations) made static.
+
+Columns are 1-D arrays of identical length.  Schema metadata (primary keys,
+uniqueness, FK edges, domain sizes) drives the paper's §4.1 set-safety and
+§4.3 FK/PK optimisations.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Mapping, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ColumnMeta:
+    """Static metadata for one column of a relation."""
+
+    name: str
+    unique: bool = False          # declared UNIQUE / PK component
+    domain: int | None = None     # values are ints in [0, domain) if known
+
+
+@dataclasses.dataclass(frozen=True)
+class ForeignKey:
+    """FK edge: ``src.src_col`` references ``dst.dst_col`` (a PK/unique col)."""
+
+    src: str
+    src_col: str
+    dst: str
+    dst_col: str
+
+
+@dataclasses.dataclass(frozen=True)
+class RelSchema:
+    """Schema of one relation."""
+
+    name: str
+    columns: tuple[ColumnMeta, ...]
+
+    def column_names(self) -> tuple[str, ...]:
+        return tuple(c.name for c in self.columns)
+
+    def meta(self, name: str) -> ColumnMeta:
+        for c in self.columns:
+            if c.name == name:
+                return c
+        raise KeyError(f"{self.name} has no column {name!r}")
+
+    def is_unique(self, cols: Sequence[str]) -> bool:
+        """True if `cols` contains at least one declared-unique column."""
+        return any(self.meta(c).unique for c in cols if c in self.column_names())
+
+
+@dataclasses.dataclass(frozen=True)
+class Schema:
+    """Database schema: relations + FK edges."""
+
+    relations: Mapping[str, RelSchema]
+    foreign_keys: tuple[ForeignKey, ...] = ()
+
+    def fk_edge(self, src: str, src_col: str, dst: str, dst_col: str) -> bool:
+        """True if src.src_col → dst.dst_col is a declared FK into a unique col."""
+        for fk in self.foreign_keys:
+            if (fk.src, fk.src_col, fk.dst, fk.dst_col) == (src, src_col, dst, dst_col):
+                return True
+        return False
+
+
+@jax.tree_util.register_pytree_node_class
+class Table:
+    """A fixed-capacity columnar relation with a frequency column.
+
+    ``columns``: dict name → 1-D array, all of length ``capacity``.
+    ``freq``:    1-D array of length ``capacity``; 0 marks dead/padded rows.
+    """
+
+    def __init__(self, columns: dict[str, jax.Array], freq: jax.Array):
+        self.columns = dict(columns)
+        self.freq = freq
+
+    # ---- pytree protocol --------------------------------------------------
+    def tree_flatten(self):
+        names = tuple(sorted(self.columns))
+        children = tuple(self.columns[n] for n in names) + (self.freq,)
+        return children, names
+
+    @classmethod
+    def tree_unflatten(cls, names, children):
+        cols = dict(zip(names, children[:-1]))
+        return cls(cols, children[-1])
+
+    # ---- construction -----------------------------------------------------
+    @classmethod
+    def from_numpy(
+        cls,
+        data: Mapping[str, np.ndarray],
+        freq_dtype: Any = jnp.int32,
+        capacity: int | None = None,
+    ) -> "Table":
+        n = len(next(iter(data.values())))
+        cap = capacity if capacity is not None else n
+        cols = {}
+        for k, v in data.items():
+            arr = np.asarray(v)
+            if cap > n:
+                pad = np.zeros((cap - n,) + arr.shape[1:], dtype=arr.dtype)
+                arr = np.concatenate([arr, pad])
+            cols[k] = jnp.asarray(arr)
+        freq = jnp.concatenate(
+            [jnp.ones((n,), freq_dtype), jnp.zeros((cap - n,), freq_dtype)]
+        )
+        return cls(cols, freq)
+
+    # ---- basic properties ---------------------------------------------
+    @property
+    def capacity(self) -> int:
+        return int(self.freq.shape[0])
+
+    @property
+    def column_names(self) -> tuple[str, ...]:
+        return tuple(sorted(self.columns))
+
+    def live_count(self) -> jax.Array:
+        """Number of live tuples (rows with freq > 0) — the paper's
+        'materialised tuples' metric for this relation."""
+        return jnp.sum((self.freq > 0).astype(jnp.int64 if jax.config.jax_enable_x64 else jnp.int32))
+
+    def weight_total(self) -> jax.Array:
+        """Sum of frequencies = bag cardinality this table represents."""
+        return jnp.sum(self.freq)
+
+    # ---- relational primitives (frequency-aware) -----------------------
+    def select(self, pred: Callable[[dict[str, jax.Array]], jax.Array]) -> "Table":
+        """σ: zero out frequencies of rows failing `pred` (no compaction)."""
+        mask = pred(self.columns)
+        return Table(self.columns, jnp.where(mask, self.freq, 0))
+
+    def with_freq(self, freq: jax.Array) -> "Table":
+        return Table(self.columns, freq)
+
+    def project(self, names: Sequence[str]) -> "Table":
+        """π (frequency-preserving; duplicates remain encoded by rows+freq)."""
+        return Table({n: self.columns[n] for n in names}, self.freq)
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return f"Table(cap={self.capacity}, cols={list(self.column_names)})"
+
+
+def pack_keys(
+    cols: Sequence[jax.Array],
+    domains: Sequence[int | None],
+    dtype: Any = None,
+) -> jax.Array:
+    """Pack multi-attribute join keys into a single integer key.
+
+    If all domains are known, packing is collision-free mixed-radix:
+    ``key = ((c0 * d1 + c1) * d2 + c2) ...``.  Otherwise a 64/32-bit
+    Fibonacci mixing hash combine is used (documented collision risk —
+    exact engines should declare domains; our generators always do).
+    """
+    if dtype is None:
+        dtype = jnp.int64 if jax.config.jax_enable_x64 else jnp.int32
+    if len(cols) == 1:
+        return cols[0].astype(dtype)
+    if all(d is not None for d in domains):
+        key = cols[0].astype(dtype)
+        for c, d in zip(cols[1:], domains[1:]):
+            key = key * jnp.asarray(d, dtype) + c.astype(dtype)
+        return key
+    # hash combine fallback
+    phi = jnp.asarray(0x9E3779B9 if dtype == jnp.int32 else 0x9E3779B97F4A7C15, dtype)
+    key = cols[0].astype(dtype)
+    for c in cols[1:]:
+        key = key ^ (c.astype(dtype) + phi + (key << 6) + (key >> 2))
+    return key

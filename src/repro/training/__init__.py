@@ -1,0 +1,13 @@
+from repro.training.optimizer import AdamWState, adamw_init, adamw_update
+from repro.training.losses import cross_entropy_loss
+from repro.training.step import TrainState, build_train_step, init_train_state
+
+__all__ = [
+    "AdamWState",
+    "adamw_init",
+    "adamw_update",
+    "cross_entropy_loss",
+    "TrainState",
+    "build_train_step",
+    "init_train_state",
+]

@@ -1,0 +1,26 @@
+"""Losses: masked cross-entropy with z-loss (logit-norm regulariser)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+IGNORE = -1  # label value excluded from the loss (e.g. image positions)
+
+
+def cross_entropy_loss(logits, labels, z_weight: float = 1e-4):
+    """logits [B,S,V] (any float dtype), labels [B,S] int (IGNORE masked).
+
+    Returns (loss, metrics)."""
+    logits = logits.astype(jnp.float32)
+    mask = (labels != IGNORE).astype(jnp.float32)
+    safe = jnp.maximum(labels, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    nll = (lse - gold) * mask
+    denom = jnp.maximum(mask.sum(), 1.0)
+    ce = nll.sum() / denom
+    zloss = (jnp.square(lse) * mask).sum() / denom
+    loss = ce + z_weight * zloss
+    return loss, {"ce": ce, "zloss": zloss,
+                  "tokens": mask.sum().astype(jnp.int32)}

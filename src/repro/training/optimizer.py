@@ -1,0 +1,88 @@
+"""AdamW with decoupled weight decay, global-norm clipping, and cosine LR.
+
+Params live in f32 (the "master" copy); model code casts to bf16 at use
+sites, so no separate cast copy is materialised.  Optimizer state shards
+exactly like the parameters (the spec tree is reused), which is what makes
+FSDP + elastic re-meshing work for the whole train state.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass
+class AdamWState:
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+jax.tree_util.register_pytree_node(
+    AdamWState,
+    lambda s: ((s.step, s.m, s.v), None),
+    lambda _, c: AdamWState(*c),
+)
+
+
+def adamw_init(params, state_dtype=jnp.float32) -> AdamWState:
+    """state_dtype=bfloat16 halves optimizer HBM (m/v stored bf16, math in
+    f32) — the memory-term lever for the biggest models (EXPERIMENTS §Perf)."""
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, state_dtype), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros,
+                      v=jax.tree.map(jnp.copy, zeros))
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def adamw_update(grads, state: AdamWState, params, *,
+                 lr: jax.Array | float,
+                 b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.1, clip_norm: float = 1.0):
+    """Returns (new_params, new_state, metrics)."""
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-9))
+    grads = jax.tree.map(lambda g: g.astype(jnp.float32) * scale, grads)
+
+    step = state.step + 1
+    b1c = 1 - b1 ** step.astype(jnp.float32)
+    b2c = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd_m(m, g):
+        return (b1 * m.astype(jnp.float32) + (1 - b1) * g).astype(m.dtype)
+
+    def upd_v(v, g):
+        return (b2 * v.astype(jnp.float32)
+                + (1 - b2) * g * g).astype(v.dtype)
+
+    new_m = jax.tree.map(upd_m, state.m, grads)
+    new_v = jax.tree.map(upd_v, state.v, grads)
+
+    def upd(p, m, v):
+        mhat = m.astype(jnp.float32) / b1c
+        vhat = v.astype(jnp.float32) / b2c
+        return (p - lr * (mhat / (jnp.sqrt(vhat) + eps)
+                          + weight_decay * p)).astype(p.dtype)
+
+    new_params = jax.tree.map(upd, params, new_m, new_v)
+    return new_params, AdamWState(step, new_m, new_v), {
+        "grad_norm": gnorm, "lr": jnp.asarray(lr, jnp.float32)}
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int
+                    ) -> Callable[[jax.Array], jax.Array]:
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = base_lr * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = 0.5 * base_lr * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, cos)
+
+    return lr

@@ -1,0 +1,73 @@
+"""Subprocess helper: runs the distributed engine on 8 fake devices and
+compares against the local executor.  Exits non-zero on mismatch.
+
+Run as:  python tests/helpers/distributed_engine_check.py
+(the test wrapper sets XLA_FLAGS before interpreter start).
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core import Executor, plan_query  # noqa: E402
+from repro.core.distributed import DistributedExecutor  # noqa: E402
+from repro.data import make_graph_db, path_query, tree_query  # noqa: E402
+from repro.data.relational import (  # noqa: E402
+    make_stats_db,
+    stats_count_query,
+    make_tpch_db,
+    tpch_v1_query,
+)
+
+
+def check(db, schema, q, mode, mesh, data_axes, name):
+    ex = Executor(db, schema)
+    want = ex.execute(plan_query(q, schema, mode=mode))
+    dex = DistributedExecutor(schema, mesh, data_axes=data_axes)
+    sharded = dex.shard_db(db)
+    got = dex.compile(plan_query(q, schema, mode=mode))(sharded)
+    for k, v in want.items():
+        if k == "__stats__":
+            continue
+        g = float(got[k])
+        w = float(v)
+        assert np.isclose(g, w, rtol=1e-5), (name, k, g, w)
+    print(f"ok {name}: " + ", ".join(
+        f"{k}={float(v)}" for k, v in got.items()))
+
+
+def main():
+    assert jax.device_count() == 8, jax.device_count()
+
+    # single-axis ring (one pod)
+    mesh1 = jax.make_mesh((8,), ("data",))
+    db, schema = make_graph_db(n_nodes=30, n_edges=500, seed=1)
+    check(db, schema, path_query(3), "opt_plus", mesh1, ("data",),
+          "path-03/1-axis")
+    check(db, schema, tree_query(2), "opt_plus", mesh1, ("data",),
+          "tree-02/1-axis")
+
+    # nested pod×data ring (multi-pod)
+    mesh2 = jax.make_mesh((2, 4), ("pod", "data"))
+    check(db, schema, path_query(4), "opt_plus", mesh2, ("pod", "data"),
+          "path-04/2-axis")
+
+    sdb, sschema = make_stats_db(n_users=64, n_posts=256, n_comments=1000,
+                                 n_votes=600, seed=3)
+    check(sdb, sschema, stats_count_query(), "opt_plus", mesh2,
+          ("pod", "data"), "stats-count/2-axis")
+
+    # 0MA semi-join ring sweep
+    tdb, tschema = make_tpch_db(scale=64, seed=5)
+    check(tdb, tschema, tpch_v1_query("minmax"), "oma", mesh2,
+          ("pod", "data"), "tpch-v1-minmax/2-axis")
+    check(tdb, tschema, tpch_v1_query("median"), "opt_plus", mesh1,
+          ("data",), "tpch-v1-median/1-axis")
+    print("ALL DISTRIBUTED CHECKS PASSED")
+
+
+if __name__ == "__main__":
+    main()

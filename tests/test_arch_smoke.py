@@ -1,0 +1,117 @@
+"""Per-architecture smoke tests: reduced same-family config, one forward
+and one train-ish step on CPU, asserting shapes and finiteness.  Also
+decode-path consistency: prefill+decode must agree with the full forward."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_smoke_config
+from repro.models import (
+    decode_step,
+    forward,
+    init_decode_state,
+    init_params,
+    prefill,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+B, S = 2, 16
+
+
+def _batch(cfg, b=B, s=S, seed=0):
+    rng = np.random.default_rng(seed)
+    batch = {
+        "tokens": jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32),
+        "labels": jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (b, s)), jnp.int32),
+    }
+    if cfg.frontend == "vision_stub":
+        batch["image_embeds"] = jnp.asarray(
+            rng.normal(size=(b, cfg.num_patches, cfg.d_model)), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_forward_shapes_and_finiteness(arch):
+    cfg = get_smoke_config(arch)
+    params, specs = init_params(jax.random.PRNGKey(0), cfg)
+    # spec tree mirrors param tree
+    assert jax.tree.structure(jax.tree.map(lambda _: 0, params)) == \
+        jax.tree.structure(jax.tree.map(lambda _: 0, specs,
+                                        is_leaf=lambda x: isinstance(x, tuple)))
+    batch = _batch(cfg)
+    logits, aux = forward(params, cfg, batch)
+    s_out = S + (cfg.num_patches if cfg.frontend == "vision_stub" else 0)
+    assert logits.shape == (B, s_out, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits))), arch
+    if cfg.family == "moe":
+        assert bool(jnp.isfinite(aux["load_balance"]))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_reduces_loss_direction(arch):
+    """One SGD step on the smoke config: grads finite, params move."""
+    cfg = get_smoke_config(arch)
+    params, _ = init_params(jax.random.PRNGKey(1), cfg)
+    batch = _batch(cfg, seed=1)
+
+    def loss_fn(p):
+        logits, aux = forward(p, cfg, batch, remat="full")
+        s_txt = batch["labels"].shape[1]
+        lg = logits[:, -s_txt:, :]
+        ll = jax.nn.log_softmax(lg.astype(jnp.float32), axis=-1)
+        nll = -jnp.take_along_axis(ll, batch["labels"][..., None],
+                                   axis=-1).mean()
+        if aux is not None and cfg.family == "moe":
+            nll = nll + 0.01 * aux["load_balance"]
+        return nll
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    assert bool(jnp.isfinite(loss)), arch
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree.leaves(grads)))
+    assert bool(jnp.isfinite(gnorm)) and float(gnorm) > 0, arch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_matches_forward(arch):
+    """Teacher-forced decode must reproduce the forward logits: the KV/SSM
+    cache machinery is exact, not approximate.  Runs in f32 so that real
+    state-handoff bugs aren't masked by (or blamed on) bf16 noise.
+    MoE archs run with a large capacity factor: capacity DROPPING is
+    inherently sequence-length-dependent (full-seq tokens compete for
+    expert slots; single-token decode steps don't), so drops are excluded
+    to isolate the cache machinery being tested."""
+    import dataclasses
+    cfg = dataclasses.replace(get_smoke_config(arch), dtype="float32")
+    if cfg.family == "moe":
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+    params, _ = init_params(jax.random.PRNGKey(2), cfg)
+    batch = _batch(cfg, b=2, s=8, seed=2)
+    logits_full, _ = forward(params, cfg, batch)
+
+    n_prefill = 4
+    cache = init_decode_state(cfg, batch=2, max_len=32)
+    pre_batch = dict(batch)
+    pre_batch["tokens"] = batch["tokens"][:, :n_prefill]
+    last_logits, cache = prefill(params, cfg, pre_batch, cache)
+
+    img_off = cfg.num_patches if cfg.frontend == "vision_stub" else 0
+    np.testing.assert_allclose(
+        np.asarray(last_logits),
+        np.asarray(logits_full[:, img_off + n_prefill - 1]),
+        rtol=1e-3, atol=1e-3)
+
+    # teacher-forced single-token decode for the next 4 positions
+    for t in range(n_prefill, 8):
+        tok = batch["tokens"][:, t:t + 1]
+        logits_t, cache = decode_step(params, cfg, tok, cache)
+        np.testing.assert_allclose(
+            np.asarray(logits_t),
+            np.asarray(logits_full[:, img_off + t]),
+            rtol=1e-3, atol=1e-3,
+            err_msg=f"{arch} decode step {t}")

@@ -1,0 +1,23 @@
+"""Distributed-engine equivalence: runs the 8-device ring sweep in a
+subprocess (device count must be fixed before jax initialises)."""
+
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+HELPER = pathlib.Path(__file__).parent / "helpers" / "distributed_engine_check.py"
+SRC = str(pathlib.Path(__file__).parent.parent / "src")
+
+
+@pytest.mark.slow
+def test_ring_freq_join_matches_local_executor():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, str(HELPER)], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    assert "ALL DISTRIBUTED CHECKS PASSED" in out.stdout

@@ -1,0 +1,22 @@
+"""LM distribution equivalence + elastic re-mesh (8-device subprocess)."""
+
+import os
+import pathlib
+import subprocess
+import sys
+
+import pytest
+
+HELPER = pathlib.Path(__file__).parent / "helpers" / "distributed_lm_check.py"
+SRC = str(pathlib.Path(__file__).parent.parent / "src")
+
+
+@pytest.mark.slow
+def test_sharded_training_and_elastic_remesh():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, str(HELPER)], env=env,
+                         capture_output=True, text=True, timeout=1200)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    assert "ALL LM DISTRIBUTED CHECKS PASSED" in out.stdout

@@ -1,0 +1,156 @@
+"""Per-kernel validation: Pallas (interpret) and XLA twins vs. jnp oracles.
+
+Sweeps shapes (incl. non-block-multiples) and dtypes; hypothesis property
+tests check the engine-level invariants the kernels must uphold.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.kernels import ops, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _rand_tables(rng, np_, nc, key_range, kdt, fdt):
+    pk = jnp.asarray(rng.integers(0, key_range, np_), kdt)
+    ck = jnp.asarray(rng.integers(0, key_range, nc), kdt)
+    pf = jnp.asarray(rng.integers(0, 4, np_), fdt)
+    cf = jnp.asarray(rng.integers(0, 4, nc), fdt)
+    return pk, pf, ck, cf
+
+
+SHAPES = [(1024, 1024), (1000, 37), (2048, 4096), (8, 8), (4096, 1000)]
+DTYPES = [(jnp.int32, jnp.int32), (jnp.int32, jnp.float32)]
+
+
+@pytest.mark.parametrize("np_,nc", SHAPES)
+@pytest.mark.parametrize("kdt,fdt", DTYPES)
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_freq_join_matches_oracle(np_, nc, kdt, fdt, backend):
+    rng = np.random.default_rng(np_ * 7919 + nc)
+    pk, pf, ck, cf = _rand_tables(rng, np_, nc, key_range=50, kdt=kdt, fdt=fdt)
+    got = ops.freq_join(pk, pf, ck, cf, mode="sum", backend=backend)
+    want = ref.freq_join_ref(pk, pf, ck, cf)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6)
+
+
+@pytest.mark.parametrize("np_,nc", SHAPES)
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_semi_join_matches_oracle(np_, nc, backend):
+    rng = np.random.default_rng(nc * 31 + np_)
+    pk, pf, ck, cf = _rand_tables(rng, np_, nc, key_range=30,
+                                  kdt=jnp.int32, fdt=jnp.int32)
+    got = ops.semi_join(pk, pf, ck, cf, backend=backend)
+    want = ref.semi_join_ref(pk, pf, ck, cf)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("n", [1024, 1000, 4096, 17, 2048])
+@pytest.mark.parametrize("vdt", [jnp.int32, jnp.float32])
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_segment_sum_matches_oracle(n, vdt, backend):
+    rng = np.random.default_rng(n)
+    keys = jnp.sort(jnp.asarray(rng.integers(0, max(2, n // 8), n), jnp.int32))
+    vals = jnp.asarray(rng.integers(-3, 5, n), vdt)
+    got, gvalid = ops.segment_sum_sorted(keys, vals, backend=backend)
+    want, _wfirst = ref.segment_sum_ref(keys, vals)
+    # Emission rows differ (ref: first-of-run; kernel: last-of-run), so
+    # compare per-key totals, which is the semantic contract.
+    def per_key(sums, mask):
+        out = {}
+        for k, s, m in zip(np.asarray(keys), np.asarray(sums), np.asarray(mask)):
+            if m:
+                out[int(k)] = out.get(int(k), 0) + s
+        return out
+
+    want_first = np.concatenate([[True], np.asarray(keys)[1:] != np.asarray(keys)[:-1]])
+    assert per_key(got, gvalid) == per_key(want, want_first)
+    # totals preserved
+    np.testing.assert_allclose(np.asarray(jnp.sum(got)),
+                               np.asarray(jnp.sum(vals)), rtol=1e-5)
+
+
+@pytest.mark.parametrize("n", [64, 1000])
+def test_weighted_percentile_matches_oracle(n):
+    rng = np.random.default_rng(n)
+    vals = jnp.asarray(rng.normal(size=n), jnp.float32)
+    w = jnp.asarray(rng.integers(0, 5, n), jnp.int32)
+    for q in (0.1, 0.5, 0.9):
+        got = ops.weighted_percentile(vals, w, q)
+        want = ref.weighted_percentile_ref(vals, w, q)
+        np.testing.assert_allclose(float(got), float(want), rtol=1e-6)
+
+
+def test_weighted_percentile_expansion_equivalence():
+    """Median over frequencies == median over the expanded bag (paper §4.2)."""
+    vals = jnp.asarray([5.0, 1.0, 3.0, 9.0], jnp.float32)
+    w = jnp.asarray([1, 3, 2, 0], jnp.int32)
+    expanded = np.repeat(np.asarray(vals), np.asarray(w))
+    got = float(ops.weighted_percentile(vals, w, 0.5))
+    # lower-interpolation median of [1,1,1,3,3,5]
+    want = float(np.sort(expanded)[max(0, int(np.ceil(0.5 * len(expanded))) - 1)])
+    assert got == want
+
+
+# ---------------------------------------------------------------------------
+# Property tests (hypothesis) — system invariants
+# ---------------------------------------------------------------------------
+small_ints = st.lists(st.integers(0, 12), min_size=1, max_size=40)
+
+
+@settings(max_examples=30, deadline=None)
+@given(pk=small_ints, ck1=small_ints, ck2=small_ints)
+def test_freq_join_distributes_over_child_union(pk, ck1, ck2):
+    """mult(R, S1 ⊎ S2) == mult(R,S1) + mult(R,S2): the additive-semiring law
+    that makes the distributed ring execution exact."""
+    pk = jnp.asarray(pk, jnp.int32)
+    pf = jnp.ones_like(pk)
+    c1 = jnp.asarray(ck1, jnp.int32)
+    c2 = jnp.asarray(ck2, jnp.int32)
+    f1 = jnp.ones_like(c1)
+    f2 = jnp.ones_like(c2)
+    whole = ops.freq_join(pk, pf, jnp.concatenate([c1, c2]),
+                          jnp.concatenate([f1, f2]), backend="xla")
+    parts = (ops.freq_join(pk, pf, c1, f1, backend="xla")
+             + ops.freq_join(pk, pf, c2, f2, backend="xla"))
+    np.testing.assert_array_equal(np.asarray(whole), np.asarray(parts))
+
+
+@settings(max_examples=30, deadline=None)
+@given(pk=small_ints, ck=small_ints)
+def test_semi_join_idempotent(pk, ck):
+    pk = jnp.asarray(pk, jnp.int32)
+    pf = jnp.ones_like(pk)
+    ck = jnp.asarray(ck, jnp.int32)
+    cf = jnp.ones_like(ck)
+    once = ops.semi_join(pk, pf, ck, cf, backend="xla")
+    twice = ops.semi_join(pk, once, ck, cf, backend="xla")
+    np.testing.assert_array_equal(np.asarray(once), np.asarray(twice))
+
+
+@settings(max_examples=30, deadline=None)
+@given(keys=small_ints)
+def test_segment_sum_mass_conservation(keys):
+    ks = jnp.sort(jnp.asarray(keys, jnp.int32))
+    vals = jnp.ones_like(ks)
+    sums, valid = ops.segment_sum_sorted(ks, vals, backend="xla")
+    assert int(jnp.sum(sums)) == len(keys)
+    # one emission per distinct key
+    assert int(jnp.sum(valid)) == len(set(keys))
+
+
+@settings(max_examples=20, deadline=None)
+@given(pk=small_ints, ck=small_ints)
+def test_pallas_equals_xla(pk, ck):
+    pk = jnp.asarray(pk, jnp.int32)
+    pf = jnp.ones_like(pk)
+    ck = jnp.asarray(ck, jnp.int32)
+    cf = jnp.ones_like(ck)
+    a = ops.freq_join(pk, pf, ck, cf, backend="xla")
+    b = ops.freq_join(pk, pf, ck, cf, backend="pallas")
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))

@@ -1,0 +1,91 @@
+"""SQL front-end + grouped-median tests."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import Executor, classify, plan_query
+from repro.core.query import Agg, AggQuery, Atom
+from repro.core.sql import SqlError, parse_sql
+from repro.data import make_stats_db, make_tpch_db
+from repro.data.relational import tpch_v1_query
+
+jax.config.update("jax_platform_name", "cpu")
+
+FIG1_SQL = """
+SELECT MIN(s.s_acctbal), MAX(s.s_acctbal)
+FROM region r, nation n, supplier s, partsupp ps, part p
+WHERE r.r_regionkey = n.n_regionkey AND n.n_nationkey = s.s_nationkey
+  AND s.s_suppkey = ps.ps_suppkey AND ps.ps_partkey = p.p_partkey
+  AND r.r_name IN (2, 3) AND p.p_price > 1200.0
+"""
+
+
+def test_fig1_sql_is_oma_and_matches_handbuilt():
+    db, schema = make_tpch_db(scale=100, seed=3)
+    q = parse_sql(FIG1_SQL, schema)
+    cls = classify(q, schema)
+    assert cls.is_oma and cls.guard == "s"
+    ex = Executor(db, schema)
+    got = ex.execute(plan_query(q, schema))
+    want = ex.execute(plan_query(tpch_v1_query("minmax"), schema))
+    np.testing.assert_allclose(
+        float(got["min(s.s_acctbal)"]), float(want["min(bal)"]))
+    np.testing.assert_allclose(
+        float(got["max(s.s_acctbal)"]), float(want["max(bal)"]))
+
+
+def test_sql_count_group_by():
+    db, schema = make_stats_db(n_users=30, n_posts=100, n_comments=250,
+                               n_votes=100, seed=2)
+    q = parse_sql("""
+        SELECT COUNT(*) FROM posts po, comments co
+        WHERE po.p_id = co.c_post
+        GROUP BY po.p_owner
+    """, schema)
+    assert q.group_by and q.aggregates[0].func == "count"
+    res = Executor(db, schema).execute(plan_query(q, schema))
+    assert "groups" in res
+
+
+def test_sql_errors_are_informative():
+    _, schema = make_tpch_db(scale=5)
+    with pytest.raises(SqlError, match="unknown relation"):
+        parse_sql("SELECT COUNT(*) FROM nope x", schema)
+    with pytest.raises(SqlError, match="no aggregate"):
+        parse_sql("SELECT p.p_price FROM part p", schema)
+    with pytest.raises(SqlError, match="unknown column"):
+        parse_sql("SELECT MIN(p.bogus) FROM part p", schema)
+
+
+def test_grouped_median_matches_numpy():
+    db, schema = make_stats_db(n_users=20, n_posts=60, n_comments=200,
+                               n_votes=80, seed=8)
+    atoms = (Atom("posts", "po", ("pid", "uid", "score")),
+             Atom("comments", "co", ("pid", "cuid", "cscore")))
+    q = AggQuery(atoms=atoms, group_by=("uid",),
+                 aggregates=(Agg("median", "score"),))
+    res = Executor(db, schema).execute(plan_query(q, schema,
+                                                  mode="opt_plus"))
+    cols, valid = res["groups"], res["valid"]
+    got = {int(u): float(m) for u, m, v in
+           zip(np.asarray(cols["uid"]), np.asarray(cols["median(score)"]),
+               np.asarray(valid)) if v}
+
+    # numpy oracle over the expanded join (weighted/lower median)
+    po, co = db["posts"], db["comments"]
+    pid2 = {}
+    for pid, uid, sc in zip(np.asarray(po.columns["p_id"]),
+                            np.asarray(po.columns["p_owner"]),
+                            np.asarray(po.columns["p_score"])):
+        pid2[int(pid)] = (int(uid), int(sc))
+    per_user: dict[int, list[int]] = {}
+    for pid in np.asarray(co.columns["c_post"]):
+        if int(pid) in pid2:
+            uid, sc = pid2[int(pid)]
+            per_user.setdefault(uid, []).append(sc)
+    want = {}
+    for uid, vals in per_user.items():
+        v = np.sort(vals)
+        want[uid] = float(v[max(0, int(np.ceil(len(v) / 2)) - 1)])
+    assert got == want
