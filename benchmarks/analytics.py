@@ -38,7 +38,7 @@ def _bench_query(ex, db, schema, q, use_fkpk=False, repeats=3,
     row = {}
     auto = plan_query(q, schema, mode="auto", use_fkpk=use_fkpk)
     row["plan"] = auto.mode
-    fn = ex.compile(auto)
+    fn = ex.jittable().compile(auto)
 
     def run_opt():
         out = fn(db)

@@ -45,7 +45,7 @@ def run(n_nodes=20_000, n_edges=200_000, seed=0, repeats=3, queries=None):
             row = {"query": name}
             # Opt+ (jitted FreqJoin plan)
             plan = plan_query(q, schema, mode="opt_plus")
-            fn = ex.compile(plan)
+            fn = ex.jittable().compile(plan)
 
             def run_optp():
                 out = fn(db)

@@ -1,0 +1,13 @@
+#!/usr/bin/env bash
+# Tier-1 verify + serving smoke: what CI runs and what every PR must keep
+# green.  Usage: scripts/verify.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1: pytest =="
+python -m pytest -x -q
+
+echo "== smoke: serving benchmark (tiny) =="
+python benchmarks/serving_queries.py --tiny

@@ -11,6 +11,7 @@ Layers:
   repro.models      — LM zoo for the 10 assigned architectures
   repro.training    — optimizer / microbatching / remat / losses
   repro.serving     — prefill & decode with KV/SSM caches
+  repro.service     — SQL serving tier: fingerprints, plan cache, QueryService
   repro.checkpoint  — sharded, elastic checkpointing
   repro.data        — synthetic relational + LM token pipelines
   repro.distributed — mesh rules, grad compression, collective helpers

@@ -38,6 +38,15 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 
+# jax.shard_map graduated from jax.experimental in 0.5.x; support both
+_shard_map = getattr(jax, "shard_map", None)
+if _shard_map is None:  # pragma: no cover - version-dependent
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+# lax.pvary arrived with the 0.5.x varying-axes checker; under the older
+# shard_map every value is already device-varying, so it's the identity
+_pvary = getattr(lax, "pvary", lambda x, axes: x)
+
 from repro.core.aggregates import scalar_aggregate
 from repro.core.plan import (
     FinalAggOp,
@@ -77,7 +86,7 @@ def ring_freq_join(pk, pf, ck, cf, *, ring_axes: Sequence[str],
         then two searchsorteds + a gather.  Saves (P−1) sorts per join —
         see EXPERIMENTS.md §Perf (engine cell).
     """
-    mult = lax.pvary(jnp.zeros(pk.shape, pf.dtype), tuple(ring_axes))
+    mult = _pvary(jnp.zeros(pk.shape, pf.dtype), tuple(ring_axes))
 
     def rotate(x, axis):
         size = lax.psum(1, axis)
@@ -273,7 +282,7 @@ class DistributedExecutor:
 
         def run(db: dict[str, Table]):
             specs = jax.tree.map(lambda _: in_specs, db)
-            cols, freq = jax.shard_map(
+            cols, freq = _shard_map(
                 sweep, mesh=self.mesh, in_specs=(specs,),
                 out_specs=in_specs)(db)
             out = {}

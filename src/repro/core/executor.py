@@ -1,14 +1,21 @@
 """Plan executor over the fixed-shape columnar substrate.
 
-Two execution surfaces:
+Two execution surfaces with deliberately different option sets:
 
   * ``execute``  — eager, runs every plan class; materialising ops (ref/opt
     baselines) use dynamic shapes the way a row engine would, and the
     executor tracks the paper's headline metric (peak materialised/live
-    tuples) per step → Fig. 6 reproduction.
+    tuples) per step → Fig. 6 reproduction.  ``oom_guard`` and ``ExecStats``
+    belong to this surface only: both need concrete intermediate sizes,
+    which exist eagerly but not under tracing.
   * ``compile``  — jits the zero-materialisation plan classes (oma /
-    opt_plus), whose dataflow is entirely static; this is the TPU path and
-    what the timing benchmarks measure.
+    opt_plus), whose dataflow is entirely static; this is the TPU path,
+    what the timing benchmarks measure, and what the serving tier caches.
+    Stats-dependent options are rejected up front (a traced program cannot
+    count live tuples per step), so an Executor configured with
+    ``oom_guard`` refuses to compile rather than silently dropping the
+    guard.  Padded tables (``Table.pad_to``) run through compiled plans
+    unchanged: every operator masks by frequency, so dead rows are inert.
 
 An ``oom_guard`` bounds materialisation for the baselines: exceeding it
 raises ``MaterialisationLimit`` (reported as the paper's X entries).
@@ -70,6 +77,14 @@ class Executor:
         self.oom_guard = oom_guard
         # beyond-paper: sort-free scatter-add FreqJoin on dense key domains
         self.dense_domain = dense_domain
+
+    def jittable(self) -> "Executor":
+        """Copy with eager-only options stripped — the configuration
+        ``compile()`` accepts.  Use when one benchmark harness drives both
+        guarded eager baselines and jitted plans."""
+        return Executor(self.db, self.schema, self.freq_dtype, self.backend,
+                        self.interpret, oom_guard=None,
+                        dense_domain=self.dense_domain)
 
     # ------------------------------------------------------------------
     def _domains(self, plan: PhysicalPlan, alias: str) -> dict[str, int | None]:
@@ -235,6 +250,14 @@ class Executor:
         if any(isinstance(op, MaterializeJoinOp) for op in plan.ops):
             raise ValueError(f"plan mode {plan.mode} materialises joins; "
                              "only oma/opt_plus plans are jittable")
+        if self.oom_guard is not None:
+            raise ValueError(
+                "oom_guard is an eager-only option: it needs concrete "
+                "per-step tuple counts, which do not exist under jit "
+                "tracing (and compiled oma/opt_plus plans never "
+                "materialise beyond the base relations anyway). Use "
+                "execute() for guarded baselines, or build the Executor "
+                "without oom_guard to compile.")
 
         def run(db: dict[str, Table]):
             inner = Executor(db, self.schema, self.freq_dtype,

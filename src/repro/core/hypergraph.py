@@ -18,13 +18,29 @@ import dataclasses
 from repro.core.query import Atom
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(eq=False)
 class JoinTree:
-    """Rooted join tree over atom aliases."""
+    """Rooted join tree over atom aliases.
+
+    Hashable/comparable by structural content (root, edge set, atoms) so
+    plans embedding a tree can serve as cache keys in the serving tier.
+    """
 
     root: str
     parent: dict[str, str | None]
     atoms: dict[str, Atom]
+
+    def cache_key(self) -> tuple:
+        return (self.root,
+                tuple(sorted((a, p or "") for a, p in self.parent.items())),
+                tuple(sorted(self.atoms.items())))
+
+    def __eq__(self, other):
+        return (isinstance(other, JoinTree)
+                and self.cache_key() == other.cache_key())
+
+    def __hash__(self):
+        return hash(self.cache_key())
 
     def children(self, alias: str) -> list[str]:
         return sorted(a for a, p in self.parent.items() if p == alias)

@@ -73,12 +73,37 @@ class FinalAggOp:
 PlanOp = ScanOp | SemiJoinOp | FreqJoinOp | MaterializeJoinOp | FinalAggOp
 
 
-@dataclasses.dataclass(frozen=True)
+@dataclasses.dataclass(frozen=True, eq=False)
 class PhysicalPlan:
     mode: str
     ops: tuple[PlanOp, ...]
     tree: JoinTree
     var_cols: dict[str, dict[str, str]]  # alias → {var → schema column}
+
+    def cache_key(self) -> tuple:
+        """Structural identity for plan caching.  Op tuples hash by field
+        values; ``ScanOp.selection`` callables hash by object identity,
+        which is exactly right — two plans sharing a selection object are
+        interchangeable, two plans with distinct closures are only unified
+        upstream by the query fingerprint (which compares declarative
+        selection specs, not closures)."""
+        return (self.mode, self.ops, self.tree.cache_key(),
+                tuple(sorted((a, tuple(sorted(m.items())))
+                             for a, m in self.var_cols.items())))
+
+    def __eq__(self, other):
+        return (isinstance(other, PhysicalPlan)
+                and self.cache_key() == other.cache_key())
+
+    def __hash__(self):
+        return hash(self.cache_key())
+
+    def scanned_rels(self) -> tuple[str, ...]:
+        """Relations this plan reads, sorted — the serving tier passes only
+        these to the jitted executable so unrelated tables can't force a
+        retrace."""
+        return tuple(sorted({op.rel for op in self.ops
+                             if isinstance(op, ScanOp)}))
 
     def describe(self) -> str:
         lines = [f"plan[{self.mode}] root={self.tree.root}"]

@@ -58,12 +58,22 @@ class Agg:
 
 @dataclasses.dataclass(frozen=True, eq=False)
 class AggQuery:
-    """γ over an ACQ. ``selections[alias]`` is σ applied at scan time."""
+    """γ over an ACQ. ``selections[alias]`` is σ applied at scan time.
+
+    ``selection_specs[alias]`` optionally carries the *declarative* form of
+    the same predicates — a tuple of ``(op, column, literal)`` terms (with
+    ``op="in"`` holding a tuple of literals) — so the serving tier can
+    fingerprint queries structurally.  Queries whose selections exist only
+    as opaque callables are still executable but never share a plan-cache
+    entry (the fingerprinter cannot prove them equivalent).
+    """
 
     atoms: tuple[Atom, ...]
     aggregates: tuple[Agg, ...]
     group_by: tuple[str, ...] = ()
     selections: Mapping[str, Callable] = dataclasses.field(default_factory=dict)
+    selection_specs: Mapping[str, tuple] = dataclasses.field(
+        default_factory=dict)
 
     def __post_init__(self):
         aliases = [a.alias for a in self.atoms]
@@ -72,6 +82,11 @@ class AggQuery:
         for alias in self.selections:
             if alias not in aliases:
                 raise ValueError(f"selection on unknown alias {alias}")
+        for alias in self.selection_specs:
+            if alias not in self.selections:
+                raise ValueError(
+                    f"selection_specs for {alias!r} without a matching "
+                    "selection callable")
 
     def atom(self, alias: str) -> Atom:
         for a in self.atoms:

@@ -128,6 +128,12 @@ def parse_sql(sql: str, schema: Schema) -> AggQuery:
                     ("in", col, values))
             elif (sm := _SEL_RE.match(cond)):
                 a, col, op, lit = sm.groups()
+                if (lm := re.match(r"^(\w+)\.(\w+)$", lit)) \
+                        and lm.group(1) in alias2rel:
+                    raise SqlError(
+                        f"non-equi join term {cond!r}: only equi-joins "
+                        "between relations are supported (θ-joins fall "
+                        "outside the paper's fragment)")
                 var_of(a, col)
                 selections.setdefault(a, []).append(
                     (op, col, _literal(lit)))
@@ -142,9 +148,13 @@ def parse_sql(sql: str, schema: Schema) -> AggQuery:
             for c in schema.relations[rel].column_names())
         atoms.append(Atom(rel, alias, vars_))
 
-    # selections → predicate closures over schema column names
+    # selections → predicate closures over schema column names, plus the
+    # declarative specs the serving tier fingerprints (see query.py)
     sel_fns = {}
+    sel_specs = {}
     for alias, conds in selections.items():
+        sel_specs[alias] = tuple(conds)
+
         def make(conds):
             def pred(cols):
                 import jax.numpy as jnp
@@ -192,4 +202,5 @@ def parse_sql(sql: str, schema: Schema) -> AggQuery:
         group_by = tuple(gs)
 
     return AggQuery(atoms=tuple(atoms), aggregates=tuple(aggs),
-                    group_by=group_by, selections=sel_fns)
+                    group_by=group_by, selections=sel_fns,
+                    selection_specs=sel_specs)

@@ -11,6 +11,17 @@ import jax
 import numpy as np
 
 
+def make_auto_mesh(shape, axes, devices=None):
+    """jax.make_mesh with explicit Auto axis types where the installed jax
+    supports them (≥0.5.x); older versions are Auto-only, so the kwarg is
+    simply dropped."""
+    kwargs = {} if devices is None else {"devices": devices}
+    axis_type = getattr(getattr(jax.sharding, "AxisType", None), "Auto", None)
+    if axis_type is not None:
+        kwargs["axis_types"] = (axis_type,) * len(axes)
+    return jax.make_mesh(shape, axes, **kwargs)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """(16, 16) = one v5e pod (256 chips) as (data, model);
     (2, 16, 16) = two pods with a leading "pod" DP axis (512 chips)."""
@@ -24,15 +35,10 @@ def make_production_mesh(*, multi_pod: bool = False):
             "dry-run entry point must set "
             "XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
             "any jax import")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-        devices=devs[:n])
+    return make_auto_mesh(shape, axes, devices=devs[:n])
 
 
 def make_host_mesh():
     """Whatever this host has (tests / examples): 1×N (data, model)."""
     n = len(jax.devices())
-    return jax.make_mesh(
-        (n, 1), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_auto_mesh((n, 1), ("data", "model"))

@@ -1,0 +1,27 @@
+"""Serving tier: plan cache, shape-bucketed jit reuse, SQL front door.
+
+Guarded aggregate plans are static-dataflow programs — compile once, serve
+many.  This package owns everything between "SQL arrives" and "compiled
+program runs": query fingerprinting (``fingerprint``), the two-level plan
+cache (``plan_cache``), and the concurrent micro-batching engine
+(``engine``).
+"""
+
+from repro.service.engine import QueryResult, QueryService, ServeStats
+from repro.service.fingerprint import (
+    CanonicalQuery,
+    canonicalize,
+    fingerprint,
+)
+from repro.service.plan_cache import LRUCache, PlanCache
+
+__all__ = [
+    "CanonicalQuery",
+    "canonicalize",
+    "fingerprint",
+    "LRUCache",
+    "PlanCache",
+    "QueryResult",
+    "QueryService",
+    "ServeStats",
+]

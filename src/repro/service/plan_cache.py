@@ -1,0 +1,111 @@
+"""Two-level plan cache: fingerprint → plan, (fingerprint, bucket) → jit.
+
+Level 1 amortises the front half of the pipeline (GYO classification,
+guard re-rooting, rule rewrites): one ``PhysicalPlan`` per query structure.
+Level 2 amortises the expensive half (XLA trace + compile): one executable
+per (structure, shape bucket).  Buckets are tuples of
+``(relation, padded_capacity)`` over the relations the plan scans, with
+capacities rounded up to powers of two (``bucket_capacity``) — so tables
+growing inside their bucket re-use the compiled program bit-for-bit.
+
+Both levels are bounded LRU with hit/miss/eviction counters; ``metrics()``
+flattens them into the dict the serving engine exposes.
+"""
+
+from __future__ import annotations
+
+from collections import OrderedDict
+from typing import Any, Callable, Hashable
+
+from repro.core.plan import PhysicalPlan
+
+ShapeBucket = tuple[tuple[str, int], ...]
+
+
+class LRUCache:
+    """Ordered-dict LRU with counters.  Single-threaded by design: the
+    serving engine serialises cache access (JAX dispatch is where the
+    concurrency lives, not the Python bookkeeping)."""
+
+    def __init__(self, capacity: int):
+        if capacity < 1:
+            raise ValueError("cache capacity must be >= 1")
+        self.capacity = capacity
+        self._d: OrderedDict[Hashable, Any] = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+        self.evictions = 0
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+    def __contains__(self, key) -> bool:
+        return key in self._d
+
+    def get(self, key, default=None):
+        if key in self._d:
+            self._d.move_to_end(key)
+            self.hits += 1
+            return self._d[key]
+        self.misses += 1
+        return default
+
+    def put(self, key, value) -> None:
+        if key in self._d:
+            self._d.move_to_end(key)
+        self._d[key] = value
+        if len(self._d) > self.capacity:
+            self._d.popitem(last=False)
+            self.evictions += 1
+
+    def get_or_create(self, key, factory: Callable[[], Any]):
+        """Return (value, hit) — counting exactly one hit or miss."""
+        if key in self._d:
+            return self.get(key), True
+        value = factory()
+        self.misses += 1
+        self.put(key, value)
+        return value, False
+
+    def invalidate_if(self, pred: Callable[[Hashable], bool]) -> int:
+        """Drop entries whose key matches; returns the count (not counted
+        as evictions — these are correctness invalidations, not pressure)."""
+        doomed = [k for k in self._d if pred(k)]
+        for k in doomed:
+            del self._d[k]
+        return len(doomed)
+
+    def counters(self) -> dict[str, int]:
+        return {"size": len(self._d), "capacity": self.capacity,
+                "hits": self.hits, "misses": self.misses,
+                "evictions": self.evictions}
+
+
+class PlanCache:
+    """fingerprint → PhysicalPlan, (fingerprint, ShapeBucket) → executable."""
+
+    def __init__(self, plan_capacity: int = 256, exec_capacity: int = 512):
+        self.plans = LRUCache(plan_capacity)
+        self.execs = LRUCache(exec_capacity)
+
+    def get_plan(self, fingerprint: str,
+                 factory: Callable[[], PhysicalPlan]) -> tuple[PhysicalPlan, bool]:
+        return self.plans.get_or_create(fingerprint, factory)
+
+    def get_executable(self, fingerprint: str, bucket: ShapeBucket,
+                       factory: Callable[[], Callable]) -> tuple[Callable, bool]:
+        return self.execs.get_or_create((fingerprint, bucket), factory)
+
+    def invalidate_relation(self, rel: str) -> int:
+        """Drop executables whose bucket pins `rel` to a now-stale capacity.
+        Called when a table's data outgrows its bucket; plans (shape-free)
+        survive."""
+        return self.execs.invalidate_if(
+            lambda key: any(r == rel for r, _ in key[1]))
+
+    def metrics(self) -> dict[str, int]:
+        out = {}
+        for level, cache in (("plan", self.plans), ("exec", self.execs)):
+            for k, v in cache.counters().items():
+                out[f"{level}_{k}"] = v
+        return out

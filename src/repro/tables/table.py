@@ -152,8 +152,40 @@ class Table:
         """π (frequency-preserving; duplicates remain encoded by rows+freq)."""
         return Table({n: self.columns[n] for n in names}, self.freq)
 
+    def pad_to(self, capacity: int) -> "Table":
+        """Grow capacity to `capacity` by appending dead rows (freq = 0).
+
+        Padding is semantically free: every operator in the engine masks by
+        frequency, so zero-freq rows join, select, and aggregate to nothing.
+        The serving tier pads tables to power-of-two buckets so that data
+        growth inside a bucket keeps jitted executables' shapes — and hence
+        their compiled programs — valid (zero recompiles)."""
+        cap = self.capacity
+        if capacity == cap:
+            return self
+        if capacity < cap:
+            raise ValueError(
+                f"pad_to({capacity}) below current capacity {cap}; tables "
+                "never shrink (drop rows by zeroing freq instead)")
+        extra = capacity - cap
+        cols = {}
+        for name, col in self.columns.items():
+            pad = jnp.zeros((extra,) + col.shape[1:], col.dtype)
+            cols[name] = jnp.concatenate([col, pad])
+        freq = jnp.concatenate(
+            [self.freq, jnp.zeros((extra,), self.freq.dtype)])
+        return Table(cols, freq)
+
     def __repr__(self) -> str:  # pragma: no cover
         return f"Table(cap={self.capacity}, cols={list(self.column_names)})"
+
+
+def bucket_capacity(n: int, min_capacity: int = 8) -> int:
+    """Smallest power of two ≥ max(n, min_capacity) — the shape bucket a
+    table of n rows compiles against.  Bucketing trades ≤2× padded rows for
+    XLA program reuse across data growth."""
+    n = max(int(n), min_capacity, 1)
+    return 1 << (n - 1).bit_length()
 
 
 def pack_keys(

@@ -27,9 +27,8 @@ from repro.training.step import TrainState  # noqa: E402
 
 
 def make_mesh(shape, names):
-    return jax.make_mesh(
-        shape, names,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(names))
+    from repro.launch.mesh import make_auto_mesh
+    return make_auto_mesh(shape, names)
 
 
 def state_shardings(cfg, mesh):

@@ -17,12 +17,12 @@ import numpy as np  # noqa: E402
 from repro.core import plan_query  # noqa: E402
 from repro.core.distributed import DistributedExecutor  # noqa: E402
 from repro.data import make_graph_db, path_query  # noqa: E402
+from repro.launch.mesh import make_auto_mesh  # noqa: E402
 
 
 def bench(presort: bool, db, schema, plan, sharded):
-    dex = DistributedExecutor(schema, jax.make_mesh(
-        (8,), ("data",),
-        axis_types=(jax.sharding.AxisType.Auto,)), data_axes=("data",),
+    dex = DistributedExecutor(schema, make_auto_mesh((8,), ("data",)),
+        data_axes=("data",),
         freq_dtype="float64", presort=presort)
     fn = dex.compile(plan)
     out = fn(sharded)
@@ -37,9 +37,8 @@ def bench(presort: bool, db, schema, plan, sharded):
 
 
 def bench_dense(db, schema, plan, sharded):
-    dex = DistributedExecutor(schema, jax.make_mesh(
-        (8,), ("data",),
-        axis_types=(jax.sharding.AxisType.Auto,)), data_axes=("data",),
+    dex = DistributedExecutor(schema, make_auto_mesh((8,), ("data",)),
+        data_axes=("data",),
         freq_dtype="float64", dense_domain=True)
     fn = dex.compile(plan)
     out = fn(sharded)
@@ -57,8 +56,7 @@ def main():
     with jax.experimental.enable_x64():
         db, schema = make_graph_db(40_000, 400_000, seed=0)
         plan = plan_query(path_query(4), schema, mode="opt_plus")
-        mesh = jax.make_mesh((8,), ("data",),
-                             axis_types=(jax.sharding.AxisType.Auto,))
+        mesh = make_auto_mesh((8,), ("data",))
         dex = DistributedExecutor(schema, mesh, data_axes=("data",),
                                   freq_dtype="float64")
         sharded = dex.shard_db(db)

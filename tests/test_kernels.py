@@ -8,8 +8,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+try:  # property tests skip without hypothesis; kernel tests always run
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
 
 from repro.kernels import ops, ref
 
@@ -100,57 +105,58 @@ def test_weighted_percentile_expansion_equivalence():
 # ---------------------------------------------------------------------------
 # Property tests (hypothesis) — system invariants
 # ---------------------------------------------------------------------------
-small_ints = st.lists(st.integers(0, 12), min_size=1, max_size=40)
+if HAVE_HYPOTHESIS:
+    small_ints = st.lists(st.integers(0, 12), min_size=1, max_size=40)
 
+    @settings(max_examples=30, deadline=None)
+    @given(pk=small_ints, ck1=small_ints, ck2=small_ints)
+    def test_freq_join_distributes_over_child_union(pk, ck1, ck2):
+        """mult(R, S1 ⊎ S2) == mult(R,S1) + mult(R,S2): the additive-semiring
+        law that makes the distributed ring execution exact."""
+        pk = jnp.asarray(pk, jnp.int32)
+        pf = jnp.ones_like(pk)
+        c1 = jnp.asarray(ck1, jnp.int32)
+        c2 = jnp.asarray(ck2, jnp.int32)
+        f1 = jnp.ones_like(c1)
+        f2 = jnp.ones_like(c2)
+        whole = ops.freq_join(pk, pf, jnp.concatenate([c1, c2]),
+                              jnp.concatenate([f1, f2]), backend="xla")
+        parts = (ops.freq_join(pk, pf, c1, f1, backend="xla")
+                 + ops.freq_join(pk, pf, c2, f2, backend="xla"))
+        np.testing.assert_array_equal(np.asarray(whole), np.asarray(parts))
 
-@settings(max_examples=30, deadline=None)
-@given(pk=small_ints, ck1=small_ints, ck2=small_ints)
-def test_freq_join_distributes_over_child_union(pk, ck1, ck2):
-    """mult(R, S1 ⊎ S2) == mult(R,S1) + mult(R,S2): the additive-semiring law
-    that makes the distributed ring execution exact."""
-    pk = jnp.asarray(pk, jnp.int32)
-    pf = jnp.ones_like(pk)
-    c1 = jnp.asarray(ck1, jnp.int32)
-    c2 = jnp.asarray(ck2, jnp.int32)
-    f1 = jnp.ones_like(c1)
-    f2 = jnp.ones_like(c2)
-    whole = ops.freq_join(pk, pf, jnp.concatenate([c1, c2]),
-                          jnp.concatenate([f1, f2]), backend="xla")
-    parts = (ops.freq_join(pk, pf, c1, f1, backend="xla")
-             + ops.freq_join(pk, pf, c2, f2, backend="xla"))
-    np.testing.assert_array_equal(np.asarray(whole), np.asarray(parts))
+    @settings(max_examples=30, deadline=None)
+    @given(pk=small_ints, ck=small_ints)
+    def test_semi_join_idempotent(pk, ck):
+        pk = jnp.asarray(pk, jnp.int32)
+        pf = jnp.ones_like(pk)
+        ck = jnp.asarray(ck, jnp.int32)
+        cf = jnp.ones_like(ck)
+        once = ops.semi_join(pk, pf, ck, cf, backend="xla")
+        twice = ops.semi_join(pk, once, ck, cf, backend="xla")
+        np.testing.assert_array_equal(np.asarray(once), np.asarray(twice))
 
+    @settings(max_examples=30, deadline=None)
+    @given(keys=small_ints)
+    def test_segment_sum_mass_conservation(keys):
+        ks = jnp.sort(jnp.asarray(keys, jnp.int32))
+        vals = jnp.ones_like(ks)
+        sums, valid = ops.segment_sum_sorted(ks, vals, backend="xla")
+        assert int(jnp.sum(sums)) == len(keys)
+        # one emission per distinct key
+        assert int(jnp.sum(valid)) == len(set(keys))
 
-@settings(max_examples=30, deadline=None)
-@given(pk=small_ints, ck=small_ints)
-def test_semi_join_idempotent(pk, ck):
-    pk = jnp.asarray(pk, jnp.int32)
-    pf = jnp.ones_like(pk)
-    ck = jnp.asarray(ck, jnp.int32)
-    cf = jnp.ones_like(ck)
-    once = ops.semi_join(pk, pf, ck, cf, backend="xla")
-    twice = ops.semi_join(pk, once, ck, cf, backend="xla")
-    np.testing.assert_array_equal(np.asarray(once), np.asarray(twice))
-
-
-@settings(max_examples=30, deadline=None)
-@given(keys=small_ints)
-def test_segment_sum_mass_conservation(keys):
-    ks = jnp.sort(jnp.asarray(keys, jnp.int32))
-    vals = jnp.ones_like(ks)
-    sums, valid = ops.segment_sum_sorted(ks, vals, backend="xla")
-    assert int(jnp.sum(sums)) == len(keys)
-    # one emission per distinct key
-    assert int(jnp.sum(valid)) == len(set(keys))
-
-
-@settings(max_examples=20, deadline=None)
-@given(pk=small_ints, ck=small_ints)
-def test_pallas_equals_xla(pk, ck):
-    pk = jnp.asarray(pk, jnp.int32)
-    pf = jnp.ones_like(pk)
-    ck = jnp.asarray(ck, jnp.int32)
-    cf = jnp.ones_like(ck)
-    a = ops.freq_join(pk, pf, ck, cf, backend="xla")
-    b = ops.freq_join(pk, pf, ck, cf, backend="pallas")
-    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    @settings(max_examples=20, deadline=None)
+    @given(pk=small_ints, ck=small_ints)
+    def test_pallas_equals_xla(pk, ck):
+        pk = jnp.asarray(pk, jnp.int32)
+        pf = jnp.ones_like(pk)
+        ck = jnp.asarray(ck, jnp.int32)
+        cf = jnp.ones_like(ck)
+        a = ops.freq_join(pk, pf, ck, cf, backend="xla")
+        b = ops.freq_join(pk, pf, ck, cf, backend="pallas")
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+else:
+    def test_property_invariants_need_hypothesis():
+        """Visible skip so a missing dependency is not silent."""
+        pytest.importorskip("hypothesis")

@@ -8,8 +8,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+try:  # property tests skip without hypothesis; mixer tests always run
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
 
 from repro.configs import get_smoke_config
 from repro.models import mamba2 as m2
@@ -99,29 +104,34 @@ AXES = [None, "batch", "seq", "embed", "heads_fused", "kv_heads", "mlp",
         "vocab", "experts", "q_seq", "kv_seq"]
 
 
-@settings(max_examples=60, deadline=None)
-@given(shape=st.lists(st.sampled_from([1, 2, 3, 8, 16, 30, 32, 64, 256]),
-                      min_size=1, max_size=5),
-       axes=st.lists(st.sampled_from(AXES), min_size=1, max_size=5))
-def test_resolve_spec_invariants(shape, axes):
-    """For every shape × logical-axes combination: (1) no mesh axis is used
-    twice, (2) every sharded dim is divisible by its axis product — i.e.
-    the spec is always a legal jit in_sharding."""
-    from repro.distributed.sharding import resolve_spec, use_mesh
-    n = min(len(shape), len(axes))
-    shape, axes = tuple(shape[:n]), tuple(axes[:n])
-    mesh = jax.sharding.AbstractMesh((2, 2, 2), ("pod", "data", "model"))
-    sizes = {"pod": 2, "data": 2, "model": 2}
-    with use_mesh(mesh):
-        spec = resolve_spec(shape, axes)
-    seen = []
-    for dim, entry in zip(shape, tuple(spec)):
-        if entry is None:
-            continue
-        group = entry if isinstance(entry, tuple) else (entry,)
-        prod = 1
-        for a in group:
-            assert a not in seen, (spec, shape, axes)
-            seen.append(a)
-            prod *= sizes[a]
-        assert dim % prod == 0, (spec, shape, axes)
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=60, deadline=None)
+    @given(shape=st.lists(st.sampled_from([1, 2, 3, 8, 16, 30, 32, 64, 256]),
+                          min_size=1, max_size=5),
+           axes=st.lists(st.sampled_from(AXES), min_size=1, max_size=5))
+    def test_resolve_spec_invariants(shape, axes):
+        """For every shape × logical-axes combination: (1) no mesh axis is
+        used twice, (2) every sharded dim is divisible by its axis product —
+        i.e. the spec is always a legal jit in_sharding."""
+        from repro.distributed.sharding import resolve_spec, use_mesh
+        n = min(len(shape), len(axes))
+        shape, axes = tuple(shape[:n]), tuple(axes[:n])
+        mesh = jax.sharding.AbstractMesh((2, 2, 2), ("pod", "data", "model"))
+        sizes = {"pod": 2, "data": 2, "model": 2}
+        with use_mesh(mesh):
+            spec = resolve_spec(shape, axes)
+        seen = []
+        for dim, entry in zip(shape, tuple(spec)):
+            if entry is None:
+                continue
+            group = entry if isinstance(entry, tuple) else (entry,)
+            prod = 1
+            for a in group:
+                assert a not in seen, (spec, shape, axes)
+                seen.append(a)
+                prod *= sizes[a]
+            assert dim % prod == 0, (spec, shape, axes)
+else:
+    def test_resolve_spec_invariants_need_hypothesis():
+        """Visible skip so a missing dependency is not silent."""
+        pytest.importorskip("hypothesis")

@@ -1,0 +1,305 @@
+"""Serving tier: fingerprint invariance, plan cache, shape buckets,
+micro-batching, and the eager fallback."""
+
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import Executor, parse_sql, plan_query
+from repro.core.query import Agg, AggQuery, Atom
+from repro.data import make_stats_db, make_tpch_db
+from repro.service import QueryService, canonicalize, fingerprint
+from repro.service.plan_cache import LRUCache, PlanCache
+from repro.tables.table import Table, bucket_capacity
+
+jax.config.update("jax_platform_name", "cpu")
+
+FIG1 = """
+SELECT MIN(s.s_acctbal), MAX(s.s_acctbal)
+FROM region r, nation n, supplier s, partsupp ps, part p
+WHERE r.r_regionkey = n.n_regionkey AND n.n_nationkey = s.s_nationkey
+  AND s.s_suppkey = ps.ps_suppkey AND ps.ps_partkey = p.p_partkey
+  AND r.r_name IN (2, 3) AND p.p_price > 1200.0
+"""
+# the same query under alias renaming, FROM/WHERE reordering, swapped
+# SELECT list, and reversed IN list
+FIG1_RENAMED = """
+SELECT MAX(su.s_acctbal), MIN(su.s_acctbal)
+FROM part pa, supplier su, region re, partsupp pp, nation na
+WHERE pa.p_price > 1200.0 AND na.n_nationkey = su.s_nationkey
+  AND re.r_regionkey = na.n_regionkey AND pp.ps_partkey = pa.p_partkey
+  AND su.s_suppkey = pp.ps_suppkey AND re.r_name IN (3, 2)
+"""
+
+
+# ---------------------------------------------------------------------------
+# fingerprinting
+# ---------------------------------------------------------------------------
+def test_fingerprint_invariant_under_alias_renaming():
+    _, schema = make_tpch_db(scale=5)
+    fa = fingerprint(parse_sql(FIG1, schema))
+    fb = fingerprint(parse_sql(FIG1_RENAMED, schema))
+    assert fa == fb
+
+
+def test_fingerprint_distinguishes_literals_and_structure():
+    _, schema = make_tpch_db(scale=5)
+    base = fingerprint(parse_sql(FIG1, schema))
+    other = fingerprint(parse_sql(FIG1.replace("1200.0", "900.0"), schema))
+    assert base != other
+    min_only = fingerprint(parse_sql(
+        "SELECT MIN(p.p_price) FROM part p", schema))
+    max_only = fingerprint(parse_sql(
+        "SELECT MAX(p.p_price) FROM part p", schema))
+    assert min_only != max_only
+
+
+def test_fingerprint_opaque_selections_never_share():
+    """Hand-built queries with closure-only selections are singletons."""
+    q1 = AggQuery(
+        atoms=(Atom("part", "p", ("pk", "price")),),
+        aggregates=(Agg("count"),),
+        selections={"p": lambda c: c["p_price"] > 100})
+    q2 = AggQuery(
+        atoms=(Atom("part", "p", ("pk", "price")),),
+        aggregates=(Agg("count"),),
+        selections={"p": lambda c: c["p_price"] > 999})
+    c1, c2 = canonicalize(q1), canonicalize(q2)
+    assert not c1.shareable and not c2.shareable
+    assert c1.fingerprint != c2.fingerprint
+    # ...but the SAME object keeps its fingerprint → repeat submissions
+    # of one hand-built query still hit their singleton cache entry
+    assert canonicalize(q1).fingerprint == c1.fingerprint
+
+
+def test_canonical_query_plans_to_same_answer():
+    """Canonicalisation is semantics-preserving: planning the canonical
+    query gives the same result as planning the original."""
+    db, schema = make_tpch_db(scale=60, seed=1)
+    q = parse_sql(FIG1, schema)
+    canon = canonicalize(q)
+    ex = Executor(db, schema)
+    want = ex.execute(plan_query(q, schema))
+    got = canon.rename_results(
+        ex.execute(plan_query(canon.query, schema)))
+    for key in ("min(s.s_acctbal)", "max(s.s_acctbal)"):
+        np.testing.assert_allclose(float(got[key]), float(want[key]))
+
+
+# ---------------------------------------------------------------------------
+# plan cache
+# ---------------------------------------------------------------------------
+def test_lru_cache_counters_and_eviction():
+    c = LRUCache(2)
+    c.put("a", 1)
+    c.put("b", 2)
+    assert c.get("a") == 1           # refresh a
+    c.put("c", 3)                    # evicts b (LRU)
+    assert c.get("b") is None
+    assert c.get("a") == 1 and c.get("c") == 3
+    m = c.counters()
+    assert m["evictions"] == 1 and m["hits"] == 3 and m["misses"] == 1
+
+
+def test_plan_cache_invalidate_relation():
+    pc = PlanCache(4, 4)
+    pc.get_executable("fp1", (("part", 128), ("supplier", 64)), lambda: "x")
+    pc.get_executable("fp2", (("nation", 32),), lambda: "y")
+    assert pc.invalidate_relation("part") == 1
+    assert ("fp2", (("nation", 32),)) in pc.execs
+    assert ("fp1", (("part", 128), ("supplier", 64))) not in pc.execs
+
+
+def test_physical_plan_hashable_and_comparable():
+    _, schema = make_tpch_db(scale=5)
+    q = parse_sql(FIG1, schema)
+    p1 = plan_query(q, schema)
+    p2 = plan_query(q, schema)
+    assert p1 == p2 and hash(p1) == hash(p2)
+    p_ref = plan_query(q, schema, mode="ref")
+    assert p1 != p_ref
+    assert len({p1, p2, p_ref}) == 2
+
+
+# ---------------------------------------------------------------------------
+# table padding / buckets
+# ---------------------------------------------------------------------------
+def test_bucket_capacity_powers_of_two():
+    assert bucket_capacity(1) == 8      # min floor
+    assert bucket_capacity(8) == 8
+    assert bucket_capacity(9) == 16
+    assert bucket_capacity(4000) == 4096
+    assert bucket_capacity(4096) == 4096
+    assert bucket_capacity(4097) == 8192
+
+
+def test_pad_to_is_semantically_free():
+    db, schema = make_tpch_db(scale=40, seed=5)
+    q = parse_sql(FIG1, schema)
+    plan = plan_query(q, schema)
+    want = Executor(db, schema).execute(plan)
+    padded = {name: t.pad_to(bucket_capacity(t.capacity))
+              for name, t in db.items()}
+    got = Executor(padded, schema).execute(plan)
+    for key in ("min(s.s_acctbal)", "max(s.s_acctbal)"):
+        np.testing.assert_allclose(float(got[key]), float(want[key]))
+    with pytest.raises(ValueError, match="never shrink"):
+        db["part"].pad_to(1)
+
+
+# ---------------------------------------------------------------------------
+# QueryService
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def tpch_service():
+    db, schema = make_tpch_db(scale=50, seed=3)
+    return QueryService(db, schema), db, schema
+
+
+def test_service_warm_requests_hit_both_cache_levels(tpch_service):
+    svc, db, schema = tpch_service
+    cold = svc.submit(FIG1)
+    assert not cold.stats.plan_cache_hit or svc.metrics()["requests"] > 1
+    warm = svc.submit(FIG1_RENAMED)   # structurally identical
+    assert warm.stats.plan_cache_hit and warm.stats.exec_cache_hit
+    np.testing.assert_allclose(
+        float(warm.values["min(su.s_acctbal)"]),
+        float(cold.values["min(s.s_acctbal)"]))
+    # answers match a from-scratch eager run
+    want = Executor(db, schema).execute(
+        plan_query(parse_sql(FIG1, schema), schema))
+    np.testing.assert_allclose(float(cold.values["max(s.s_acctbal)"]),
+                               float(want["max(s.s_acctbal)"]))
+
+
+def test_service_microbatch_dedup(tpch_service):
+    svc, _, _ = tpch_service
+    before = svc.metrics()
+    results = svc.submit_many([FIG1, FIG1_RENAMED, FIG1])
+    after = svc.metrics()
+    assert after["dedup_saved"] - before["dedup_saved"] == 2
+    assert after["compiles"] == before["compiles"]  # warm fingerprint
+    shared = [r.stats.shared_execution for r in results]
+    assert shared == [False, True, True]
+    vals = [float(r.values[next(k for k in r.values if k.startswith("min"))])
+            for r in results]
+    assert vals[0] == vals[1] == vals[2]
+
+
+def test_service_group_by_renames_outputs(tpch_service):
+    svc, db, _ = tpch_service
+    res = svc.submit("""
+        SELECT COUNT(*) AS cnt FROM supplier s, nation n
+        WHERE s.s_nationkey = n.n_nationkey GROUP BY n.n_regionkey
+    """)
+    cols, valid = res.values["groups"], np.asarray(res.values["valid"])
+    assert "cnt" in cols and "n.n_regionkey" in cols
+    got = sum(int(c) for c, v in zip(np.asarray(cols["cnt"]), valid) if v)
+    assert got == int(db["supplier"].live_count())
+
+
+def test_service_same_bucket_growth_zero_recompiles():
+    db, schema = make_tpch_db(scale=50, seed=7)
+    svc = QueryService(db, schema)
+    svc.submit(FIG1)
+    compiles = svc.metrics()["compiles"]
+
+    # grow partsupp inside its bucket: capacity 4000 → bucket 4096
+    ps = db["partsupp"]
+    bucket = bucket_capacity(ps.capacity)
+    extra = bucket - ps.capacity
+    assert extra > 0
+    rng = np.random.default_rng(0)
+    grown = {
+        "ps_partkey": np.concatenate([np.asarray(ps.columns["ps_partkey"]),
+                                      rng.integers(0, 1000, extra)]).astype(np.int32),
+        "ps_suppkey": np.concatenate([np.asarray(ps.columns["ps_suppkey"]),
+                                      rng.integers(0, 50, extra)]).astype(np.int32),
+        "ps_supplycost": np.concatenate(
+            [np.asarray(ps.columns["ps_supplycost"]),
+             rng.gamma(2.0, 150.0, extra).astype(np.float32)]),
+    }
+    svc.update_table("partsupp", Table.from_numpy(grown))
+    res = svc.submit(FIG1)
+    m = svc.metrics()
+    assert m["compiles"] == compiles          # zero recompiles
+    assert m["bucket_invalidations"] == 0
+    assert res.stats.exec_cache_hit
+
+    # a dtype drift would be a cache "hit" that silently re-traces inside
+    # jax.jit — update_table must refuse it
+    bad = dict(grown)
+    bad["ps_supplycost"] = bad["ps_supplycost"].astype(np.int32)
+    with pytest.raises(ValueError, match="dtype"):
+        svc.update_table("partsupp", Table.from_numpy(bad))
+
+    # crossing the bucket boundary must invalidate and recompile
+    bigger = {k: np.concatenate([v, v[:8]]) for k, v in grown.items()}
+    svc.update_table("partsupp", Table.from_numpy(bigger))
+    res2 = svc.submit(FIG1)
+    m2 = svc.metrics()
+    assert m2["bucket_invalidations"] == 1
+    assert m2["compiles"] == compiles + 1
+    assert not res2.stats.exec_cache_hit
+    np.testing.assert_allclose(
+        float(res2.values["min(s.s_acctbal)"]),
+        float(res.values["min(s.s_acctbal)"]))
+
+
+def test_service_eager_fallback_for_unguarded_plans():
+    """MEDIAN over an FK/FK join is guarded only when the guard covers the
+    output vars; an unguarded aggregate must fall back to the eager
+    materialising path and still answer."""
+    db, schema = make_stats_db(n_users=20, n_posts=50, n_comments=120,
+                               n_votes=40, seed=1)
+    svc = QueryService(db, schema)
+    # aggregate vars spread over two atoms → no guard → ref plan
+    q = AggQuery(
+        atoms=(Atom("posts", "po", ("pid", "uid", "score")),
+               Atom("comments", "co", ("pid", "cuid", "cscore"))),
+        aggregates=(Agg("median", "score"), Agg("median", "cscore")))
+    res = svc.submit(q)
+    assert res.stats.mode == "ref"
+    assert res.stats.exec_stats is not None
+    assert res.stats.exec_stats.peak_tuples > 0
+    assert svc.metrics()["eager_requests"] == 1
+
+
+def test_service_concurrent_submissions_are_safe():
+    db, schema = make_tpch_db(scale=30, seed=9)
+    svc = QueryService(db, schema)
+    svc.submit(FIG1)  # warm once so threads race on the hot path
+    errors: list = []
+    outs: list = []
+
+    def worker():
+        try:
+            r = svc.submit(FIG1_RENAMED)
+            outs.append(float(r.values["min(su.s_acctbal)"]))
+        except Exception as e:  # pragma: no cover
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    assert len(set(outs)) == 1
+    assert svc.metrics()["compiles"] == 1
+
+
+def test_compile_rejects_eager_only_options():
+    db, schema = make_tpch_db(scale=10)
+    q = parse_sql(FIG1, schema)
+    plan = plan_query(q, schema)
+    guarded = Executor(db, schema, oom_guard=1000)
+    with pytest.raises(ValueError, match="eager-only"):
+        guarded.compile(plan)
+    # jittable() strips the guard
+    fn = guarded.jittable().compile(plan)
+    out = fn(db)
+    assert "min(s.s_acctbal)" in out

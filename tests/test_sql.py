@@ -58,6 +58,52 @@ def test_sql_errors_are_informative():
         parse_sql("SELECT MIN(p.bogus) FROM part p", schema)
 
 
+def test_sql_malformed_aggregate():
+    _, schema = make_tpch_db(scale=5)
+    # empty argument list never matches the aggregate grammar
+    with pytest.raises(SqlError, match="no aggregate"):
+        parse_sql("SELECT MIN() FROM part p", schema)
+    # unqualified column in an aggregate
+    with pytest.raises(SqlError, match="qualify the column"):
+        parse_sql("SELECT MIN(p_price) FROM part p", schema)
+    # unknown alias inside the aggregate
+    with pytest.raises(SqlError, match="unknown alias"):
+        parse_sql("SELECT MIN(zz.p_price) FROM part p", schema)
+
+
+def test_sql_unknown_relation_and_alias_in_where():
+    _, schema = make_tpch_db(scale=5)
+    with pytest.raises(SqlError, match="unknown relation"):
+        parse_sql("SELECT COUNT(*) FROM part p, nosuch n "
+                  "WHERE p.p_partkey = n.n_key", schema)
+    with pytest.raises(SqlError, match="unknown alias"):
+        parse_sql("SELECT COUNT(*) FROM part p "
+                  "WHERE q.p_price > 10", schema)
+
+
+def test_sql_non_equi_join_term_rejected():
+    _, schema = make_tpch_db(scale=5)
+    with pytest.raises(SqlError, match="non-equi join"):
+        parse_sql("""
+            SELECT COUNT(*) FROM partsupp ps, part p
+            WHERE ps.ps_partkey = p.p_partkey
+              AND ps.ps_supplycost < p.p_price
+        """, schema)
+    with pytest.raises(SqlError, match="unsupported WHERE term"):
+        parse_sql("SELECT COUNT(*) FROM part p "
+                  "WHERE p.p_price BETWEEN 1 AND 2", schema)
+
+
+def test_sql_exposes_declarative_selection_specs():
+    """The serving tier fingerprints queries by their declarative selection
+    specs; parse_sql must populate them alongside the closures."""
+    _, schema = make_tpch_db(scale=5)
+    q = parse_sql(FIG1_SQL, schema)
+    assert set(q.selection_specs) == set(q.selections) == {"r", "p"}
+    assert ("in", "r_name", (2, 3)) in q.selection_specs["r"]
+    assert (">", "p_price", 1200.0) in q.selection_specs["p"]
+
+
 def test_grouped_median_matches_numpy():
     db, schema = make_stats_db(n_users=20, n_posts=60, n_comments=200,
                                n_votes=80, seed=8)
