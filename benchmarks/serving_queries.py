@@ -8,9 +8,17 @@ measures the properties the serving tier exists for:
   2. repeated queries after same-bucket data growth trigger ZERO recompiles
      (shape bucketing + freq-masked padding), verified via cache counters;
   3. micro-batched throughput on a skewed request mix (dashboards repeat
-     the same handful of fingerprints).
+     the same handful of fingerprints);
+  4. cross-fingerprint fusion: a dashboard of N *distinct* queries sharing
+     scan/semi-join prefixes served via one ``submit_many`` must beat
+     serving them individually on total XLA compiles AND wall-clock, with
+     bitwise-identical answers per query.
 
-    PYTHONPATH=src python benchmarks/serving_queries.py [--tiny]
+    PYTHONPATH=src python benchmarks/serving_queries.py [--tiny] [--smoke]
+
+``--smoke`` runs only the fused-batching scenario on tiny tables and
+asserts cache/fusion counters and answer identity (no timing gates) —
+what ``scripts/verify.sh`` runs so serving regressions fail CI fast.
 """
 
 from __future__ import annotations
@@ -74,6 +82,48 @@ DISTINCT_QUERIES = [
     ("supp-by-nation", SUPP_BY_NATION),
     ("costly-parts", COSTLY_PARTS),
 ]
+
+# ---- mixed dashboard workload (cross-fingerprint fusion) -------------------
+# N distinct queries over shared dimension joins.  Family A: four aggregates
+# over supplier⋈nation⋈region with identical selections (one shared
+# semi-join prefix); family B: two over partsupp⋈part (a second prefix);
+# plus the 5-way FIG1 as a loner that fuses with nothing.  Fused serving
+# should cost 3 compiles (A, B, FIG1) instead of 7.
+_SUPP_DIMS = """FROM supplier s, nation n, region r
+WHERE s.s_nationkey = n.n_nationkey AND n.n_regionkey = r.r_regionkey
+  AND r.r_name IN (2, 3)"""
+_PART_DIMS = """FROM partsupp ps, part p
+WHERE ps.ps_partkey = p.p_partkey AND p.p_price > 1500.0"""
+DASHBOARD_QUERIES = [
+    ("dash-minmax", f"SELECT MIN(s.s_acctbal), MAX(s.s_acctbal) {_SUPP_DIMS}"),
+    ("dash-sum", f"SELECT SUM(s.s_acctbal) {_SUPP_DIMS}"),
+    ("dash-by-nation", "SELECT COUNT(*) AS suppliers, AVG(s.s_acctbal) AS "
+                       f"avg_bal {_SUPP_DIMS} GROUP BY s.s_nationkey"),
+    ("dash-median", f"SELECT MEDIAN(s.s_acctbal) {_SUPP_DIMS}"),
+    ("dash-supplycost", f"SELECT SUM(ps.ps_supplycost), COUNT(*) {_PART_DIMS}"),
+    ("dash-by-supp", "SELECT AVG(ps.ps_supplycost) AS avg_cost "
+                     f"{_PART_DIMS} GROUP BY ps.ps_suppkey"),
+    ("dash-fig1", FIG1),
+]
+DASHBOARD_FUSION_SETS = 3     # A-family, B-family, FIG1 singleton
+DASHBOARD_FUSED_PROGRAMS = 2  # fusion sets with ≥ 2 members
+DASHBOARD_FUSED_QUERIES = 6   # members of the two multi-query programs
+
+
+def _values_equal(a: dict, b: dict) -> bool:
+    """Bitwise equality of two QueryResult.values dicts."""
+    if set(a) != set(b):
+        return False
+    for k, va in a.items():
+        vb = b[k]
+        if k == "groups":
+            if set(va) != set(vb) or any(
+                    not np.array_equal(np.asarray(va[c]), np.asarray(vb[c]))
+                    for c in va):
+                return False
+        elif not np.array_equal(np.asarray(va), np.asarray(vb)):
+            return False
+    return True
 
 
 def _grow_within_bucket(db: dict[str, Table], rel: str, seed: int = 0):
@@ -158,17 +208,99 @@ def run(scale: int = 1000, warm_iters: int = 25, seed: int = 0):
     return report
 
 
+def run_fused(scale: int = 1000, repeats: int = 3, seed: int = 0):
+    """Mixed dashboard workload: N distinct prefix-sharing queries, served
+    individually vs via fused ``submit_many``.  Returns walls, compile
+    counts, per-query identity, and the fused service's metrics."""
+    db, schema = make_tpch_db(scale=scale, seed=seed)
+    sqls = [sql for _, sql in DASHBOARD_QUERIES]
+
+    svc_solo = QueryService(db, schema)
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        solo = [svc_solo.submit(sql) for sql in sqls]
+    solo_s = time.perf_counter() - t0
+
+    svc_fused = QueryService(db, schema)
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        fused = svc_fused.submit_many(sqls)
+    fused_s = time.perf_counter() - t0
+
+    identical = all(_values_equal(a.values, b.values)
+                    for a, b in zip(solo, fused))
+    return {
+        "queries": len(sqls),
+        "repeats": repeats,
+        "solo_s": solo_s,
+        "fused_s": fused_s,
+        "solo_compiles": svc_solo.metrics()["compiles"],
+        "fused_compiles": svc_fused.metrics()["compiles"],
+        "identical": identical,
+        "fused_metrics": svc_fused.metrics(),
+    }
+
+
+def check_fused(rf: dict) -> list[str]:
+    """Gate the fused scenario's counters + identity; returns failures."""
+    fails = []
+    m = rf["fused_metrics"]
+    if not rf["identical"]:
+        fails.append("fused answers differ from individual serving")
+    if rf["fused_compiles"] >= rf["solo_compiles"]:
+        fails.append(f"fused used {rf['fused_compiles']} compiles, "
+                     f"individual used {rf['solo_compiles']}")
+    if rf["fused_compiles"] != DASHBOARD_FUSION_SETS:
+        fails.append(f"expected {DASHBOARD_FUSION_SETS} fused-path "
+                     f"compiles, got {rf['fused_compiles']}")
+    if m["fused_queries"] != rf["repeats"] * DASHBOARD_FUSED_QUERIES:
+        fails.append(f"fused_queries={m['fused_queries']} != "
+                     f"{rf['repeats']} × {DASHBOARD_FUSED_QUERIES}")
+    if m["fused_hits"] < (rf["repeats"] - 1) * DASHBOARD_FUSED_PROGRAMS:
+        fails.append(f"fused executable cache hits {m['fused_hits']} — "
+                     "repeat dashboards are not reusing fused programs")
+    return fails
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--tiny", action="store_true",
                     help="smoke-test scale (CI)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="fused scenario only, counter assertions, no "
+                         "timing gates (what scripts/verify.sh runs)")
     ap.add_argument("--scale", type=int, default=None)
     ap.add_argument("--warm-iters", type=int, default=None)
     args = ap.parse_args(argv)
-    scale = args.scale or (50 if args.tiny else 1000)
-    warm_iters = args.warm_iters or (8 if args.tiny else 25)
+    tiny = args.tiny or args.smoke
+    scale = args.scale or (50 if tiny else 1000)
+    warm_iters = args.warm_iters or (8 if tiny else 25)
 
     jax.config.update("jax_platform_name", "cpu")
+
+    rf = run_fused(scale=scale, repeats=2 if tiny else 3)
+    m = rf["fused_metrics"]
+    print(f"fused dashboard   {rf['queries']} distinct queries × "
+          f"{rf['repeats']} rounds")
+    print(f"  individual      {rf['solo_s'] * 1e3:>10.1f} ms "
+          f"({rf['solo_compiles']} compiles)")
+    print(f"  fused           {rf['fused_s'] * 1e3:>10.1f} ms "
+          f"({rf['fused_compiles']} compiles)")
+    print(f"  identical={rf['identical']} "
+          f"fused_batches={m['fused_batches']} "
+          f"fused_queries={m['fused_queries']} "
+          f"prefix_saved={m['fused_prefix_saved']} "
+          f"fused cache {m['fused_hits']}/{m['fused_hits'] + m['fused_misses']} hit")
+    fused_fails = check_fused(rf)
+    if not args.smoke and rf["fused_s"] >= rf["solo_s"]:
+        fused_fails.append(f"fused wall {rf['fused_s']:.3f}s not below "
+                           f"individual {rf['solo_s']:.3f}s")
+    if args.smoke:
+        for f in fused_fails:
+            print(f"FAIL: {f}")
+        print("PASS" if not fused_fails else "FAIL")
+        return 0 if not fused_fails else 1
+
     r = run(scale=scale, warm_iters=warm_iters)
 
     print(f"serving benchmark  scale={r['scale']}")
@@ -198,6 +330,9 @@ def main(argv=None):
     if r["growth_recompiles"] != 0:
         print(f"FAIL: same-bucket growth caused "
               f"{r['growth_recompiles']} recompiles")
+        ok = False
+    for f in fused_fails:
+        print(f"FAIL: {f}")
         ok = False
     print("PASS" if ok else "FAIL")
     return 0 if ok else 1

@@ -55,7 +55,8 @@ def serving_example():
     (repro.service) compiles each query *structure* once and answers every
     subsequent request — under any alias/variable renaming — from cache.
     Tables are padded to power-of-two shape buckets, so data growth inside
-    a bucket never recompiles.
+    a bucket never recompiles.  Distinct queries sharing a scan/semi-join
+    prefix are fused into one multi-query XLA program by ``submit_many``.
     """
     from repro.service import QueryService
 
@@ -93,10 +94,31 @@ def serving_example():
     batch = svc.submit_many([sql, renamed, sql])
     print(f"[serve] batch of 3 → shared runs: "
           f"{[r.stats.shared_execution for r in batch]}")
+
+    # cross-fingerprint fusion: DIFFERENT queries over the same dimension
+    # joins (here: three aggregates over supplier⋈nation⋈region) share a
+    # scan/semi-join prefix, so submit_many compiles and runs them as ONE
+    # XLA program — one compile and one prefix execution instead of three
+    dims = """FROM supplier s, nation n, region r
+        WHERE s.s_nationkey = n.n_nationkey
+          AND n.n_regionkey = r.r_regionkey AND r.r_name IN (2, 3)"""
+    dashboard = [
+        f"SELECT MIN(s.s_acctbal), MAX(s.s_acctbal) {dims}",
+        f"SELECT SUM(s.s_acctbal) {dims}",
+        f"SELECT COUNT(*) AS cnt, AVG(s.s_acctbal) AS avg {dims} "
+        "GROUP BY s.s_nationkey",
+    ]
+    fused = svc.submit_many(dashboard)
+    print(f"[serve] fused dashboard of {len(dashboard)}: "
+          f"fused={[r.stats.fused for r in fused]} "
+          f"group_size={fused[0].stats.fused_group_size}")
     m = svc.metrics()
     print(f"[serve] metrics: compiles={m['compiles']} "
+          f"(fused={m['fused_compiles']}) "
           f"plan hits/misses={m['plan_hits']}/{m['plan_misses']} "
-          f"exec hits/misses={m['exec_hits']}/{m['exec_misses']}")
+          f"exec hits/misses={m['exec_hits']}/{m['exec_misses']} "
+          f"fused_queries={m['fused_queries']} "
+          f"prefix_saved={m['fused_prefix_saved']}")
 
 
 def sql_example():

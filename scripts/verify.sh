@@ -9,5 +9,8 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 echo "== tier-1: pytest =="
 python -m pytest -x -q
 
-echo "== smoke: serving benchmark (tiny) =="
+# tiny tables; gates cache counters, fused-batching counters + answer
+# identity, warm speedup, and zero same-bucket recompiles.  For an even
+# faster counters-only pass use `--smoke` instead.
+echo "== smoke: serving benchmark (tiny, incl. fused counters) =="
 python benchmarks/serving_queries.py --tiny

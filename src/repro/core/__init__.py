@@ -7,6 +7,7 @@ operator (§5), and the shard_map distributed engine.
 from repro.core.executor import ExecStats, Executor, MaterialisationLimit
 from repro.core.hypergraph import JoinTree, build_join_tree
 from repro.core.oma import Classification, classify
+from repro.core.plan import PhysicalPlan, PlanSegments, segment_plan
 from repro.core.query import Agg, AggQuery, Atom
 from repro.core.rewrite import plan_query
 from repro.core.sql import parse_sql, SqlError
@@ -19,7 +20,10 @@ __all__ = [
     "classify",
     "build_join_tree",
     "JoinTree",
+    "PhysicalPlan",
+    "PlanSegments",
     "plan_query",
+    "segment_plan",
     "parse_sql",
     "SqlError",
     "Executor",

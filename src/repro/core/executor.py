@@ -38,6 +38,7 @@ from repro.core.plan import (
     PhysicalPlan,
     ScanOp,
     SemiJoinOp,
+    op_result_keys,
 )
 from repro.kernels import ops as kops
 from repro.tables.table import Schema, Table, pack_keys
@@ -245,11 +246,11 @@ class Executor:
         return out
 
     # ------------------------------------------------------------------
-    def compile(self, plan: PhysicalPlan):
-        """Jit the static plan classes (oma / opt_plus): db → aggregates."""
-        if any(isinstance(op, MaterializeJoinOp) for op in plan.ops):
-            raise ValueError(f"plan mode {plan.mode} materialises joins; "
-                             "only oma/opt_plus plans are jittable")
+    def _check_jittable(self, plans) -> None:
+        for plan in plans:
+            if any(isinstance(op, MaterializeJoinOp) for op in plan.ops):
+                raise ValueError(f"plan mode {plan.mode} materialises joins; "
+                                 "only oma/opt_plus plans are jittable")
         if self.oom_guard is not None:
             raise ValueError(
                 "oom_guard is an eager-only option: it needs concrete "
@@ -259,38 +260,92 @@ class Executor:
                 "execute() for guarded baselines, or build the Executor "
                 "without oom_guard to compile.")
 
+    def _trace_plan(self, db: dict[str, Table], plan: PhysicalPlan,
+                    memo: dict | None = None,
+                    keys: list | None = None) -> dict[str, Any]:
+        """One plan's static op sweep, for use under tracing.
+
+        ``memo`` maps structural op keys (``plan.op_result_keys``) to the
+        frequency vectors already computed this trace: when a key hits, the
+        op's kernels are not traced again and the cached vector is reused —
+        this is how a fused multi-query program runs a shared scan/semi-join
+        prefix exactly once."""
+        inner = Executor(db, self.schema, self.freq_dtype,
+                         self.backend, self.interpret,
+                         dense_domain=self.dense_domain)
+        state: dict[str, _State] = {}
+        results: dict[str, Any] = {}
+        for i, op in enumerate(plan.ops):
+            key = keys[i] if keys is not None and memo is not None else None
+            if isinstance(op, ScanOp):
+                st = inner._scan(plan, op)
+                if key is not None:
+                    if key in memo:
+                        st.freq = memo[key]
+                    else:
+                        memo[key] = st.freq
+                state[op.alias] = st
+            elif isinstance(op, SemiJoinOp):
+                p, c = state[op.parent], state[op.child]
+                if key is not None and key in memo:
+                    p.freq = memo[key]
+                    continue
+                pk, _pd = inner._key(plan, op.parent, p, op.on_vars)
+                ck, cdom = inner._key(plan, op.child, c, op.on_vars)
+                p.freq = kops.semi_join(pk, p.freq, ck, c.freq,
+                                        backend=self.backend,
+                                        interpret=self.interpret,
+                                        domain=cdom)
+                if key is not None:
+                    memo[key] = p.freq
+            elif isinstance(op, FreqJoinOp):
+                p, c = state[op.parent], state[op.child]
+                if key is not None and key in memo:
+                    p.freq = memo[key]
+                    continue
+                pk, _pd = inner._key(plan, op.parent, p, op.on_vars)
+                ck, cdom = inner._key(plan, op.child, c, op.on_vars)
+                cf = c.freq
+                if op.pregroup and cdom is None:
+                    ck, cf, _ = kops.group_by_sum(
+                        ck, cf, backend=self.backend,
+                        interpret=self.interpret)
+                p.freq = kops.freq_join(pk, p.freq, ck, cf,
+                                        backend=self.backend,
+                                        interpret=self.interpret,
+                                        domain=cdom)
+                if key is not None:
+                    memo[key] = p.freq
+            elif isinstance(op, FinalAggOp):
+                results = inner._final_agg(plan, op, state[op.root])
+        return results
+
+    def compile(self, plan: PhysicalPlan):
+        """Jit the static plan classes (oma / opt_plus): db → aggregates."""
+        self._check_jittable([plan])
+
         def run(db: dict[str, Table]):
-            inner = Executor(db, self.schema, self.freq_dtype,
-                             self.backend, self.interpret,
-                             dense_domain=self.dense_domain)
-            state: dict[str, _State] = {}
-            results: dict[str, Any] = {}
-            for op in plan.ops:
-                if isinstance(op, ScanOp):
-                    state[op.alias] = inner._scan(plan, op)
-                elif isinstance(op, SemiJoinOp):
-                    p, c = state[op.parent], state[op.child]
-                    pk, _pd = inner._key(plan, op.parent, p, op.on_vars)
-                    ck, cdom = inner._key(plan, op.child, c, op.on_vars)
-                    p.freq = kops.semi_join(pk, p.freq, ck, c.freq,
-                                            backend=self.backend,
-                                            interpret=self.interpret,
-                                            domain=cdom)
-                elif isinstance(op, FreqJoinOp):
-                    p, c = state[op.parent], state[op.child]
-                    pk, _pd = inner._key(plan, op.parent, p, op.on_vars)
-                    ck, cdom = inner._key(plan, op.child, c, op.on_vars)
-                    cf = c.freq
-                    if op.pregroup and cdom is None:
-                        ck, cf, _ = kops.group_by_sum(
-                            ck, cf, backend=self.backend,
-                            interpret=self.interpret)
-                    p.freq = kops.freq_join(pk, p.freq, ck, cf,
-                                            backend=self.backend,
-                                            interpret=self.interpret,
-                                            domain=cdom)
-                elif isinstance(op, FinalAggOp):
-                    results = inner._final_agg(plan, op, state[op.root])
-            return results
+            return self._trace_plan(db, plan)
+
+        return jax.jit(run)
+
+    def compile_multi(self, plans: list[PhysicalPlan]):
+        """Jit several static plans into ONE program: db → [aggregates].
+
+        The member plans' op sweeps share a trace-level memo keyed by
+        ``op_result_keys``, so scans and semi-join/FreqJoin chains that are
+        structurally identical across members (a shared prefix, in
+        ``segment_plan`` terms) are computed once and their frequency
+        vectors fanned out to every member's suffix.  One XLA compilation
+        serves every member query; results are returned in plan order."""
+        if not plans:
+            raise ValueError("compile_multi needs at least one plan")
+        self._check_jittable(plans)
+        keyed = [(plan, op_result_keys(plan)) for plan in plans]
+
+        def run(db: dict[str, Table]):
+            memo: dict = {}
+            return [self._trace_plan(db, plan, memo, keys)
+                    for plan, keys in keyed]
 
         return jax.jit(run)

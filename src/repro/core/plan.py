@@ -18,6 +18,7 @@ skips useless pre-grouping on unique keys.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import Callable
 
 from repro.core.hypergraph import JoinTree
@@ -26,9 +27,15 @@ from repro.core.query import Agg
 
 @dataclasses.dataclass(frozen=True)
 class ScanOp:
+    """``spec`` carries the declarative form of ``selection`` (the query's
+    ``selection_specs`` entry) when one exists; the segmentation pass keys
+    scans on it so structurally-equal selections from *different* query
+    objects unify.  Opaque selections key on callable identity instead."""
+
     alias: str
     rel: str
     selection: Callable | None
+    spec: tuple | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -110,3 +117,95 @@ class PhysicalPlan:
         for op in self.ops:
             lines.append(f"  {op}")
         return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# Plan segmentation (cross-fingerprint fusion support)
+# ---------------------------------------------------------------------------
+#
+# A zero-materialisation plan is `prefix ; suffix`: the prefix (scans +
+# semi-join/FreqJoin sweep) computes the root relation's frequency vector,
+# the suffix (FinalAggOp) folds it into answers.  The prefix depends only on
+# the join structure and selections — NOT on which aggregates the query
+# asks for — so two different fingerprints often share it verbatim.  The
+# keys below name each op's produced frequency vector structurally
+# (relations, selection specs, join columns — never aliases or variable
+# names, which canonicalisation assigns role-sensitively), so isomorphic
+# prefixes from different queries map to equal keys and a multi-query
+# executor can compute each distinct vector once.
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanSegments:
+    """A plan split at the aggregate boundary.
+
+    ``prefix_key`` is the structural identity of the root frequency vector
+    the prefix computes: two plans with equal keys (and equal shape
+    buckets) can be fused into one XLA program that runs the prefix once.
+    ``None`` marks plans with no shareable prefix (materialising ops, whose
+    dataflow is dynamic and never jitted anyway).
+    """
+
+    prefix_ops: tuple[PlanOp, ...]
+    suffix_ops: tuple[PlanOp, ...]
+    prefix_key: str | None
+
+
+def _scan_key(plan: "PhysicalPlan", op: ScanOp) -> tuple:
+    atom = plan.tree.atoms[op.alias]
+    # repeated variables inside one atom change which column a variable
+    # resolves to downstream; capture the equality pattern positionally
+    pattern = tuple(atom.vars.index(v) for v in atom.vars)
+    if op.selection is not None and op.spec is None:
+        sel: object = ("<opaque>", id(op.selection))
+    else:
+        sel = op.spec
+    return ("scan", op.rel, pattern, sel)
+
+
+def _thread_keys(plan: "PhysicalPlan"):
+    """Walk the op sequence once, threading each alias's current frequency
+    key.  Returns (per-op produced key, final alias → key map) — the single
+    source of the chain rule both ``op_result_keys`` and ``segment_plan``
+    consume, so they cannot drift when a new PlanOp type is added."""
+    cur: dict[str, tuple | None] = {}
+    out: list[tuple | None] = []
+    for op in plan.ops:
+        key: tuple | None = None
+        if isinstance(op, ScanOp):
+            key = _scan_key(plan, op)
+            cur[op.alias] = key
+        elif isinstance(op, (SemiJoinOp, FreqJoinOp)):
+            pk, ck = cur.get(op.parent), cur.get(op.child)
+            if pk is not None and ck is not None:
+                pcols = tuple(plan.var_cols[op.parent][v] for v in op.on_vars)
+                ccols = tuple(plan.var_cols[op.child][v] for v in op.on_vars)
+                tag = ("semi",) if isinstance(op, SemiJoinOp) \
+                    else ("freq", op.pregroup)
+                key = (tag, pk, ck, pcols, ccols)
+            cur[op.parent] = key
+        elif isinstance(op, MaterializeJoinOp):
+            cur[op.parent] = None  # dynamic shapes: poison the chain
+        out.append(key)
+    return out, cur
+
+
+def op_result_keys(plan: "PhysicalPlan") -> list[tuple | None]:
+    """Per-op structural keys for the frequency vector each op produces
+    (``None`` for ops that produce none / are never shared).  Two ops with
+    equal keys — possibly from different plans — compute identical vectors
+    over the same database, which is what lets ``Executor.compile_multi``
+    deduplicate shared work across member plans."""
+    return _thread_keys(plan)[0]
+
+
+def segment_plan(plan: "PhysicalPlan") -> PlanSegments:
+    """Split `plan` into (shareable prefix, per-query suffix)."""
+    prefix = tuple(op for op in plan.ops if not isinstance(op, FinalAggOp))
+    suffix = tuple(op for op in plan.ops if isinstance(op, FinalAggOp))
+    prefix_key: str | None = None
+    if not any(isinstance(op, MaterializeJoinOp) for op in plan.ops):
+        root_key = _thread_keys(plan)[1].get(plan.tree.root)
+        if root_key is not None:
+            prefix_key = hashlib.sha256(repr(root_key).encode()).hexdigest()
+    return PlanSegments(prefix, suffix, prefix_key)

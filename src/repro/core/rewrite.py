@@ -70,7 +70,8 @@ def plan_query(query: AggQuery, schema: Schema, mode: str = "auto",
         raise ValueError("query is not guarded; frequency propagation "
                          "would lose the aggregate attributes")
 
-    ops: list = [ScanOp(a.alias, a.rel, query.selections.get(a.alias))
+    ops: list = [ScanOp(a.alias, a.rel, query.selections.get(a.alias),
+                        spec=query.selection_specs.get(a.alias))
                  for a in query.atoms]
 
     if mode == "ref":

@@ -12,6 +12,7 @@ from repro.service.fingerprint import (
     CanonicalQuery,
     canonicalize,
     fingerprint,
+    prefix_fingerprint,
 )
 from repro.service.plan_cache import LRUCache, PlanCache
 
@@ -19,6 +20,7 @@ __all__ = [
     "CanonicalQuery",
     "canonicalize",
     "fingerprint",
+    "prefix_fingerprint",
     "LRUCache",
     "PlanCache",
     "QueryResult",

@@ -30,6 +30,15 @@ duplicates drops to a dict rename.  Plans that fall outside the jittable
 fragment (unguarded/cyclic → ref) are still served, eagerly, with the
 paper's ExecStats attached.
 
+Cross-fingerprint fusion: *different* fingerprints whose plans share a
+scan/semi-join prefix (``segment_plan``: same relations, selections, join
+shape, and guard rooting) are compiled into ONE multi-query XLA program
+(``Executor.compile_multi``) that runs the shared prefix once and fans the
+root frequency vector out to each member's aggregate suffix.  A dashboard
+firing N distinct aggregates over the same dimension joins costs one
+compile and one prefix execution instead of N.  Fused executables live in
+a prefix-keyed cache level; ``metrics()`` exposes ``fused_*`` counters.
+
 Thread safety: submissions serialise on an internal lock (Python-side
 bookkeeping is cheap; the work lives in XLA dispatch), so concurrent
 callers can share one service.
@@ -46,7 +55,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.executor import ExecStats, Executor
-from repro.core.plan import MaterializeJoinOp, PhysicalPlan
+from repro.core.plan import MaterializeJoinOp, PhysicalPlan, segment_plan
 from repro.core.rewrite import plan_query
 from repro.core.sql import parse_sql
 from repro.service.fingerprint import CanonicalQuery, canonicalize
@@ -63,6 +72,8 @@ class ServeStats:
     plan_cache_hit: bool = False
     exec_cache_hit: bool = False
     shared_execution: bool = False   # answered by a batch-mate's run
+    fused: bool = False              # answered by a multi-query program
+    fused_group_size: int = 0        # distinct fingerprints in that program
     bucket: ShapeBucket = ()
     parse_s: float = 0.0
     plan_s: float = 0.0
@@ -84,27 +95,54 @@ class _Request:
     stats: ServeStats
 
 
+@dataclasses.dataclass
+class _Unit:
+    """One fingerprint's worth of a batch: the requests sharing it, their
+    cached plan, and (once served) the canonical result dict."""
+
+    group: list[_Request]
+    plan: PhysicalPlan
+    plan_hit: bool
+    plan_s: float
+    eager: bool                       # materialising plan → eager fallback
+    prefix_key: str | None            # shareable-prefix identity (jittable)
+    results: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def canon(self) -> CanonicalQuery:
+        return self.group[0].canon
+
+
 class QueryService:
     def __init__(self, db: dict[str, Table], schema: Schema, *,
                  mode: str = "auto", use_fkpk: bool = False,
                  freq_dtype=jnp.int32, backend: str = "xla",
                  interpret: bool = True, dense_domain: bool = False,
                  plan_capacity: int = 256, exec_capacity: int = 512,
-                 min_bucket: int = 8):
+                 fused_capacity: int = 128, min_bucket: int = 8):
         self._db = dict(db)
         self.schema = schema
         self.mode = mode
         self.use_fkpk = use_fkpk
         self.min_bucket = min_bucket
-        self.cache = PlanCache(plan_capacity, exec_capacity)
+        self.cache = PlanCache(plan_capacity, exec_capacity, fused_capacity)
         self._jit_executor = Executor(self._db, schema, freq_dtype, backend,
                                       interpret, dense_domain=dense_domain)
         self._padded: dict[str, Table] = {}
+        # fingerprint → (eager, prefix_key): segmentation is a pure function
+        # of the canonical structure, so memoise it across batches (bounded:
+        # cleared when it outgrows the plan cache several times over)
+        self._segments: dict[str, tuple[bool, str | None]] = {}
         self._lock = threading.RLock()
         self._counters = {
             "requests": 0, "batches": 0, "dedup_saved": 0,
             "compiles": 0, "eager_requests": 0,
             "bucket_invalidations": 0,
+            # cross-fingerprint fusion
+            "fused_batches": 0,       # fused program executions
+            "fused_queries": 0,       # distinct fingerprints they answered
+            "fused_compiles": 0,      # of "compiles", how many were fused
+            "fused_prefix_saved": 0,  # prefix executions avoided
         }
         self._compile_s_total = 0.0
 
@@ -166,8 +204,12 @@ class QueryService:
         return self.submit_many([query])[0]
 
     def submit_many(self, queries) -> list[QueryResult]:
-        """Serve a batch of concurrent requests.  Requests sharing a
-        fingerprint are answered by one executable invocation."""
+        """Serve a batch of concurrent requests.
+
+        Requests sharing a fingerprint are answered by one executable
+        invocation; fingerprints sharing a plan prefix (same scans,
+        selections, and join sweep — only the aggregates differ) are fused
+        into one multi-query program compiled and run once."""
         with self._lock:
             reqs = [self._admit(q) for q in queries]
             groups: dict[str, list[_Request]] = {}
@@ -175,16 +217,36 @@ class QueryService:
                 groups.setdefault(r.canon.fingerprint, []).append(r)
             self._counters["requests"] += len(reqs)
             self._counters["batches"] += 1
-            results: dict[int, QueryResult] = {}
             for group in groups.values():
                 self._counters["dedup_saved"] += len(group) - 1
-                canonical = self._run_group(group)
-                for i, r in enumerate(group):
+
+            units = [self._plan_unit(group) for group in groups.values()]
+
+            # partition: eager fallbacks run alone; jittable units group by
+            # (query-level prefix candidate, plan-level prefix identity)
+            fusable: dict[tuple[str, str], list[_Unit]] = {}
+            for u in units:
+                if u.eager:
+                    self._serve_eager(u)
+                elif u.prefix_key is None:
+                    self._serve_single(u)
+                else:
+                    key = (u.canon.prefix_fingerprint, u.prefix_key)
+                    fusable.setdefault(key, []).append(u)
+            for (_pfp, prefix_key), us in fusable.items():
+                if len(us) == 1:
+                    self._serve_single(us[0])
+                else:
+                    self._serve_fused(prefix_key, us)
+
+            results: dict[int, QueryResult] = {}
+            for u in units:
+                for i, r in enumerate(u.group):
                     r.stats.shared_execution = i > 0
                     r.stats.total_s = (r.stats.parse_s + r.stats.plan_s
                                        + r.stats.compile_s + r.stats.run_s)
                     results[id(r)] = QueryResult(
-                        r.canon.rename_results(canonical), r.stats)
+                        r.canon.rename_results(u.results), r.stats)
             return [results[id(r)] for r in reqs]
 
     def _admit(self, query) -> _Request:
@@ -197,41 +259,93 @@ class QueryService:
         stats.fingerprint = canon.fingerprint
         return _Request(canon, stats)
 
-    def _run_group(self, group: list[_Request]) -> dict:
-        """Plan, compile, and run once for every request in `group`;
-        returns the canonical result dict."""
-        leader = group[0]
-        canon = leader.canon
-
+    def _plan_unit(self, group: list[_Request]) -> _Unit:
+        """L1 plan-cache lookup + segmentation for one fingerprint group."""
+        canon = group[0].canon
         t0 = time.perf_counter()
         plan, plan_hit = self.cache.get_plan(
             canon.fingerprint,
             lambda: plan_query(canon.query, self.schema, mode=self.mode,
                                use_fkpk=self.use_fkpk))
         plan_s = time.perf_counter() - t0
+        seg = self._segments.get(canon.fingerprint)
+        if seg is None:
+            eager = any(isinstance(op, MaterializeJoinOp) for op in plan.ops)
+            prefix_key = None if eager else segment_plan(plan).prefix_key
+            if len(self._segments) > 4 * self.cache.plans.capacity:
+                self._segments.clear()
+            self._segments[canon.fingerprint] = seg = (eager, prefix_key)
+        eager, prefix_key = seg
+        return _Unit(group, plan, plan_hit, plan_s, eager, prefix_key)
 
-        if any(isinstance(op, MaterializeJoinOp) for op in plan.ops):
-            results, run_s = self._run_eager(group, plan)
-            compile_s, exec_hit, bucket = 0.0, False, ()
-        else:
-            bucket = self._bucket_for(plan)
-            fn, exec_hit, compile_s = self._executable(canon, plan, bucket)
-            sub_db = {rel: self._padded_view(rel)
-                      for rel in plan.scanned_rels()}
-            t0 = time.perf_counter()
-            results = fn(sub_db)
-            jax.block_until_ready(results)
-            run_s = time.perf_counter() - t0
-
-        for r in group:
-            r.stats.mode = plan.mode
-            r.stats.plan_cache_hit = plan_hit
+    def _finish_unit(self, u: _Unit, results: dict, *, exec_hit: bool,
+                     bucket: ShapeBucket, compile_s: float, run_s: float,
+                     fused_size: int = 0) -> None:
+        u.results = results
+        for r in u.group:
+            r.stats.mode = u.plan.mode
+            r.stats.plan_cache_hit = u.plan_hit
             r.stats.exec_cache_hit = exec_hit
+            r.stats.fused = fused_size > 1
+            r.stats.fused_group_size = fused_size
             r.stats.bucket = bucket
-            r.stats.plan_s = plan_s
+            r.stats.plan_s = u.plan_s
             r.stats.compile_s = compile_s
             r.stats.run_s = run_s
-        return results
+
+    def _serve_single(self, u: _Unit) -> None:
+        """The classic path: one fingerprint, one executable."""
+        bucket = self._bucket_for(u.plan)
+        fn, exec_hit, compile_s = self._executable(u.canon, u.plan, bucket)
+        sub_db = {rel: self._padded_view(rel)
+                  for rel in u.plan.scanned_rels()}
+        t0 = time.perf_counter()
+        results = fn(sub_db)
+        jax.block_until_ready(results)
+        run_s = time.perf_counter() - t0
+        self._finish_unit(u, results, exec_hit=exec_hit, bucket=bucket,
+                          compile_s=compile_s, run_s=run_s)
+
+    def _serve_fused(self, prefix_key: str, units: list[_Unit]) -> None:
+        """Compile and run several prefix-sharing fingerprints as ONE
+        program: the shared scan/semi-join prefix executes once, each
+        member's aggregate suffix folds the same root frequency vector."""
+        units.sort(key=lambda u: u.canon.fingerprint)
+        members = tuple(u.canon.fingerprint for u in units)
+        plans = [u.plan for u in units]
+        rels = sorted({rel for p in plans for rel in p.scanned_rels()})
+        bucket: ShapeBucket = tuple(
+            (rel, bucket_capacity(self._db[rel].capacity, self.min_bucket))
+            for rel in rels)
+        compile_s = 0.0
+
+        def build():
+            nonlocal compile_s
+            t0 = time.perf_counter()
+            fn = self._jit_executor.compile_multi(plans)
+            sub = {rel: self._padded_view(rel) for rel in rels}
+            jax.block_until_ready(fn(sub))
+            compile_s = time.perf_counter() - t0
+            self._counters["compiles"] += 1
+            self._counters["fused_compiles"] += 1
+            self._compile_s_total += compile_s
+            return fn
+
+        fn, exec_hit = self.cache.get_fused(prefix_key, members, bucket,
+                                            build)
+        sub_db = {rel: self._padded_view(rel) for rel in rels}
+        t0 = time.perf_counter()
+        outs = fn(sub_db)
+        jax.block_until_ready(outs)
+        run_s = time.perf_counter() - t0
+
+        self._counters["fused_batches"] += 1
+        self._counters["fused_queries"] += len(units)
+        self._counters["fused_prefix_saved"] += len(units) - 1
+        for u, results in zip(units, outs):
+            self._finish_unit(u, results, exec_hit=exec_hit, bucket=bucket,
+                              compile_s=compile_s, run_s=run_s,
+                              fused_size=len(units))
 
     def _executable(self, canon: CanonicalQuery, plan: PhysicalPlan,
                     bucket: ShapeBucket) -> tuple[Callable, bool, float]:
@@ -254,22 +368,25 @@ class QueryService:
         fn, hit = self.cache.get_executable(canon.fingerprint, bucket, build)
         return fn, hit, compile_s
 
-    def _run_eager(self, group: list[_Request], plan: PhysicalPlan):
+    def _serve_eager(self, u: _Unit) -> None:
         """Fallback for non-jittable (materialising) plans: serve eagerly
         with the paper's per-step ExecStats attached."""
-        self._counters["eager_requests"] += len(group)
+        self._counters["eager_requests"] += len(u.group)
         # the jit executor shares self._db (update_table mutates in place)
         # and was never configured with eager-only options, so it serves
         # the eager surface too
         stats = ExecStats()
         t0 = time.perf_counter()
-        results = self._jit_executor.execute(plan, stats)
-        jax.block_until_ready(
-            [v for k, v in results.items() if k != "__stats__"])
+        results = self._jit_executor.execute(u.plan, stats)
+        # the executor's "__stats__" sentinel is bookkeeping, not an answer
+        # column: it travels via ServeStats.exec_stats only
+        results.pop("__stats__", None)
+        jax.block_until_ready(list(results.values()))
         run_s = time.perf_counter() - t0
-        for r in group:
+        self._finish_unit(u, results, exec_hit=False, bucket=(),
+                          compile_s=0.0, run_s=run_s)
+        for r in u.group:
             r.stats.exec_stats = stats
-        return results, run_s
 
     # ---- observability ---------------------------------------------------
     def metrics(self) -> dict[str, Any]:

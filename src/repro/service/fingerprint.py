@@ -26,6 +26,15 @@ Queries carrying opaque selection callables without declarative
 ``selection_specs`` cannot be proven equivalent to anything, so their
 fingerprints are salted with a process-unique nonce: they cache as
 singletons (repeat submissions of the *same object* still hit).
+
+Besides the full fingerprint, canonicalisation exposes a **prefix
+fingerprint**: the identity of the scan/join structure alone, computed
+with aggregate/GROUP BY roles excluded from the colouring.  Two queries
+with different fingerprints but equal prefix fingerprints read the same
+relations through the same join shape with the same selections — the
+candidate condition for fusing them into one XLA program (the serving
+tier's cross-fingerprint batching; the exact per-plan test lives in
+``repro.core.plan.segment_plan``).
 """
 
 from __future__ import annotations
@@ -55,6 +64,14 @@ class CanonicalQuery:
     ``query``        — the canonical AggQuery (plan and compile against
                        this; structurally identical requests share it).
     ``fingerprint``  — stable hex identity (plan-cache key).
+    ``prefix_fingerprint`` — identity of the query's scan/join structure
+                       alone (atoms + selections, aggregate- and
+                       GROUP-BY-blind).  Two *different* fingerprints with
+                       equal prefix fingerprints read the same relations
+                       through the same join shape and are candidates for
+                       fused cross-fingerprint batching (the exact test is
+                       plan-level: ``repro.core.plan.segment_plan``, which
+                       also accounts for guard rooting).
     ``shareable``    — False when opaque selections forced a singleton.
     ``agg_names``    — requested output name per canonical aggregate
                        (canonical aggregate i is named ``agg{i}``).
@@ -63,12 +80,17 @@ class CanonicalQuery:
 
     query: AggQuery
     fingerprint: str
+    prefix_fingerprint: str
     shareable: bool
     agg_names: tuple[str, ...]
     group_names: tuple[str, ...]
 
     def rename_results(self, results: dict) -> dict:
-        """Map a canonical result dict back to the request's names."""
+        """Map a canonical result dict back to the request's names.
+
+        Only answer keys survive: executor bookkeeping such as the
+        ``__stats__`` sentinel never reaches ``QueryResult.values`` (eager
+        stats travel via ``ServeStats.exec_stats``)."""
         out = {}
         for i, name in enumerate(self.agg_names):
             key = f"agg{i}"
@@ -87,8 +109,6 @@ class CanonicalQuery:
                     cols[name] = cols.pop(key)
             out["groups"] = cols
             out["valid"] = results["valid"]
-        if "__stats__" in results:
-            out["__stats__"] = results["__stats__"]
         return out
 
 
@@ -102,31 +122,30 @@ def _canon_spec(spec: tuple) -> tuple:
     return tuple(sorted(terms, key=repr))
 
 
-def canonicalize(query: AggQuery) -> CanonicalQuery:
-    # --- declarative selection specs (or opaque markers) per alias -------
-    specs: dict[str, tuple] = {}
-    shareable = True
-    for alias in query.selections:
-        spec = query.selection_specs.get(alias)
-        if spec is None:
-            shareable = False
-            specs[alias] = ("<opaque>",)
-        else:
-            specs[alias] = _canon_spec(spec)
+def _canonical_atom_entries(query: AggQuery, specs: dict[str, tuple],
+                            seed_roles: bool, occ=None):
+    """WL-colour variables and return sorted canonical atom entries.
 
-    # --- variable colouring ---------------------------------------------
-    occ: dict[str, list[tuple[str, int, str]]] = {}
-    for a in query.atoms:
-        for i, v in enumerate(a.vars):
-            occ.setdefault(v, []).append((a.rel, i, a.alias))
+    ``seed_roles=True`` seeds colours with aggregate/GROUP BY roles — the
+    full-query canonical form.  ``seed_roles=False`` colours by occurrence
+    structure alone, so two queries differing only in which aggregates they
+    compute over the same join produce identical entries: the basis of the
+    prefix fingerprint.  ``occ`` lets the caller share one occurrence map
+    across both colourings."""
+    if occ is None:
+        occ = {}
+        for a in query.atoms:
+            for i, v in enumerate(a.vars):
+                occ.setdefault(v, []).append((a.rel, i, a.alias))
     roles: dict[str, list] = {}
-    for ag in query.aggregates:
-        if ag.var is not None:
-            roles.setdefault(ag.var, []).append((ag.func, ag.distinct))
+    if seed_roles:
+        for ag in query.aggregates:
+            if ag.var is not None:
+                roles.setdefault(ag.var, []).append((ag.func, ag.distinct))
     color = {}
     for v, sites in occ.items():
         color[v] = _h((sorted((r, i) for r, i, _ in sites),
-                       v in query.group_by,
+                       seed_roles and v in query.group_by,
                        sorted(roles.get(v, ()))))
     for _ in range(len(color)):
         new = {}
@@ -147,11 +166,31 @@ def canonicalize(query: AggQuery) -> CanonicalQuery:
     vmap = {v: f"v{i}"
             for i, v in enumerate(sorted(occ, key=lambda v: color[v]))}
 
-    # --- canonical atoms --------------------------------------------------
     entries = sorted(
         ((a.rel, tuple(vmap[v] for v in a.vars), specs.get(a.alias, ()),
           a.alias) for a in query.atoms),
         key=lambda e: (e[0], e[1], repr(e[2])))
+    return entries, vmap
+
+
+def canonicalize(query: AggQuery) -> CanonicalQuery:
+    # --- declarative selection specs (or opaque markers) per alias -------
+    specs: dict[str, tuple] = {}
+    shareable = True
+    for alias in query.selections:
+        spec = query.selection_specs.get(alias)
+        if spec is None:
+            shareable = False
+            specs[alias] = ("<opaque>",)
+        else:
+            specs[alias] = _canon_spec(spec)
+
+    occ: dict[str, list[tuple[str, int, str]]] = {}
+    for a in query.atoms:
+        for i, v in enumerate(a.vars):
+            occ.setdefault(v, []).append((a.rel, i, a.alias))
+    entries, vmap = _canonical_atom_entries(query, specs, seed_roles=True,
+                                            occ=occ)
     amap = {alias: f"t{i}" for i, (_, _, _, alias) in enumerate(entries)}
     catoms = tuple(Atom(rel, amap[alias], vars_)
                    for rel, vars_, _, alias in entries)
@@ -181,15 +220,36 @@ def canonicalize(query: AggQuery) -> CanonicalQuery:
                cgroup,
                tuple(sorted((amap[a], s) for a, s in specs.items())))
     fp = _h(payload)
+
+    # --- prefix fingerprint: the scan/join structure, role-blind ---------
+    # when the query has no variable roles at all (COUNT(*), no GROUP BY)
+    # the seeded colouring already IS role-blind — skip the second pass
+    if not query.group_by and all(ag.var is None for ag in query.aggregates):
+        p_entries = entries
+    else:
+        p_entries, _ = _canonical_atom_entries(query, specs,
+                                               seed_roles=False, occ=occ)
+    prefix_fp = _h(tuple((rel, vars_, spec)
+                         for rel, vars_, spec, _ in p_entries))
+
     if not shareable:
         salted = _OPAQUE_FPS.get(query)
         if salted is None:
             salted = f"{fp}:opaque{next(_OPAQUE_NONCE)}"
             _OPAQUE_FPS[query] = salted
         fp = salted
-    return CanonicalQuery(cquery, fp, shareable, agg_names, group_names)
+        # an opaque selection can't be proven equal to anything, so the
+        # prefix can't fuse across objects either: salt it identically
+        prefix_fp = f"{prefix_fp}:{salted.rsplit(':', 1)[1]}"
+    return CanonicalQuery(cquery, fp, prefix_fp, shareable,
+                          agg_names, group_names)
 
 
 def fingerprint(query: AggQuery) -> str:
     """Convenience: the stable identity alone."""
     return canonicalize(query).fingerprint
+
+
+def prefix_fingerprint(query: AggQuery) -> str:
+    """Convenience: the aggregate-blind scan/join-structure identity."""
+    return canonicalize(query).prefix_fingerprint

@@ -1,4 +1,5 @@
-"""Two-level plan cache: fingerprint → plan, (fingerprint, bucket) → jit.
+"""Plan cache: fingerprint → plan, (fingerprint, bucket) → jit, and a
+prefix-keyed level for fused multi-query programs.
 
 Level 1 amortises the front half of the pipeline (GYO classification,
 guard re-rooting, rule rewrites): one ``PhysicalPlan`` per query structure.
@@ -7,8 +8,12 @@ per (structure, shape bucket).  Buckets are tuples of
 ``(relation, padded_capacity)`` over the relations the plan scans, with
 capacities rounded up to powers of two (``bucket_capacity``) — so tables
 growing inside their bucket re-use the compiled program bit-for-bit.
+Level 3 caches *fused* executables — one XLA program answering several
+distinct fingerprints that share a scan/semi-join prefix — keyed by
+(prefix key, sorted member fingerprints, bucket), so a repeating dashboard
+workload recompiles nothing.
 
-Both levels are bounded LRU with hit/miss/eviction counters; ``metrics()``
+All levels are bounded LRU with hit/miss/eviction counters; ``metrics()``
 flattens them into the dict the serving engine exposes.
 """
 
@@ -82,11 +87,21 @@ class LRUCache:
 
 
 class PlanCache:
-    """fingerprint → PhysicalPlan, (fingerprint, ShapeBucket) → executable."""
+    """Three levels:
 
-    def __init__(self, plan_capacity: int = 256, exec_capacity: int = 512):
+    * ``plans`` — fingerprint → PhysicalPlan;
+    * ``execs`` — (fingerprint, ShapeBucket) → single-query executable;
+    * ``fused`` — (prefix_key, member fingerprints, ShapeBucket) → fused
+      multi-query executable.  ``prefix_key`` is the shared-prefix identity
+      from ``segment_plan``; the member tuple is sorted so any request
+      order for the same query set hits the same compiled program.
+    """
+
+    def __init__(self, plan_capacity: int = 256, exec_capacity: int = 512,
+                 fused_capacity: int = 128):
         self.plans = LRUCache(plan_capacity)
         self.execs = LRUCache(exec_capacity)
+        self.fused = LRUCache(fused_capacity)
 
     def get_plan(self, fingerprint: str,
                  factory: Callable[[], PhysicalPlan]) -> tuple[PhysicalPlan, bool]:
@@ -96,16 +111,30 @@ class PlanCache:
                        factory: Callable[[], Callable]) -> tuple[Callable, bool]:
         return self.execs.get_or_create((fingerprint, bucket), factory)
 
+    def get_fused(self, prefix_key: str, members: tuple[str, ...],
+                  bucket: ShapeBucket,
+                  factory: Callable[[], Callable]) -> tuple[Callable, bool]:
+        """Fused executable for a sorted tuple of member fingerprints that
+        share the plan prefix `prefix_key` at shapes `bucket`."""
+        return self.fused.get_or_create((prefix_key, members, bucket),
+                                        factory)
+
     def invalidate_relation(self, rel: str) -> int:
         """Drop executables whose bucket pins `rel` to a now-stale capacity.
         Called when a table's data outgrows its bucket; plans (shape-free)
-        survive."""
-        return self.execs.invalidate_if(
-            lambda key: any(r == rel for r, _ in key[1]))
+        survive.  Fused programs key their bucket last, single-query
+        programs second."""
+        def stale(key) -> bool:
+            bucket = key[-1]
+            return any(r == rel for r, _ in bucket)
+
+        return (self.execs.invalidate_if(stale)
+                + self.fused.invalidate_if(stale))
 
     def metrics(self) -> dict[str, int]:
         out = {}
-        for level, cache in (("plan", self.plans), ("exec", self.execs)):
+        for level, cache in (("plan", self.plans), ("exec", self.execs),
+                             ("fused", self.fused)):
             for k, v in cache.counters().items():
                 out[f"{level}_{k}"] = v
         return out

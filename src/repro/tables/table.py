@@ -57,8 +57,10 @@ class RelSchema:
         raise KeyError(f"{self.name} has no column {name!r}")
 
     def is_unique(self, cols: Sequence[str]) -> bool:
-        """True if `cols` contains at least one declared-unique column."""
-        return any(self.meta(c).unique for c in cols if c in self.column_names())
+        """True if `cols` contains at least one declared-unique column.
+        Unknown names raise (via ``meta``): a typo in FK/PK metadata must
+        not silently flip a §4.3 pre-grouping decision."""
+        return any(self.meta(c).unique for c in cols)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -109,6 +111,10 @@ class Table:
     ) -> "Table":
         n = len(next(iter(data.values())))
         cap = capacity if capacity is not None else n
+        if cap < n:
+            raise ValueError(
+                f"capacity {cap} below data length {n}; tables never "
+                "shrink (drop rows by zeroing freq instead)")
         cols = {}
         for k, v in data.items():
             arr = np.asarray(v)

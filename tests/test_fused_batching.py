@@ -1,0 +1,278 @@
+"""Cross-fingerprint fused batching: prefix fingerprints, plan
+segmentation, multi-query compilation, and the serving-tier fusion path."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import Executor, parse_sql, plan_query, segment_plan
+from repro.core.plan import FinalAggOp, MaterializeJoinOp, op_result_keys
+from repro.core.query import Agg, AggQuery, Atom
+from repro.data import make_stats_db, make_tpch_db
+from repro.service import QueryService, canonicalize, prefix_fingerprint
+from repro.tables.table import Table
+
+jax.config.update("jax_platform_name", "cpu")
+
+# Four aggregates over the same dimension joins: distinct fingerprints,
+# one shared scan/semi-join prefix.
+_SUPP_DIMS = """FROM supplier s, nation n, region r
+WHERE s.s_nationkey = n.n_nationkey AND n.n_regionkey = r.r_regionkey
+  AND r.r_name IN (2, 3)"""
+DASH_MINMAX = f"SELECT MIN(s.s_acctbal), MAX(s.s_acctbal) {_SUPP_DIMS}"
+DASH_SUM = f"SELECT SUM(s.s_acctbal) {_SUPP_DIMS}"
+DASH_GROUP = (f"SELECT COUNT(*) AS cnt, AVG(s.s_acctbal) AS avg_bal "
+              f"{_SUPP_DIMS} GROUP BY s.s_nationkey")
+# same structure as DASH_SUM under alias renaming + clause reordering
+DASH_SUM_RENAMED = """
+SELECT SUM(su.s_acctbal) FROM region re, supplier su, nation na
+WHERE re.r_name IN (3, 2) AND na.n_regionkey = re.r_regionkey
+  AND su.s_nationkey = na.n_nationkey
+"""
+# different selection literal → different prefix
+DASH_SUM_OTHER_SEL = DASH_SUM.replace("(2, 3)", "(1, 4)")
+FIG1 = """
+SELECT MIN(s.s_acctbal), MAX(s.s_acctbal)
+FROM region r, nation n, supplier s, partsupp ps, part p
+WHERE r.r_regionkey = n.n_regionkey AND n.n_nationkey = s.s_nationkey
+  AND s.s_suppkey = ps.ps_suppkey AND ps.ps_partkey = p.p_partkey
+  AND r.r_name IN (2, 3) AND p.p_price > 1200.0
+"""
+
+DASHBOARD = [DASH_MINMAX, DASH_SUM, DASH_GROUP]
+
+
+@pytest.fixture(scope="module")
+def tpch():
+    return make_tpch_db(scale=40, seed=3)
+
+
+def _assert_values_equal(a: dict, b: dict):
+    assert set(a) == set(b)
+    for k, va in a.items():
+        vb = b[k]
+        if k == "groups":
+            assert set(va) == set(vb)
+            for c in va:
+                np.testing.assert_array_equal(np.asarray(va[c]),
+                                              np.asarray(vb[c]))
+        else:
+            np.testing.assert_array_equal(np.asarray(va), np.asarray(vb))
+
+
+# ---------------------------------------------------------------------------
+# prefix fingerprints (query level)
+# ---------------------------------------------------------------------------
+def test_prefix_fingerprint_shared_across_aggregates(tpch):
+    _, schema = tpch
+    canons = [canonicalize(parse_sql(sql, schema)) for sql in DASHBOARD]
+    fps = {c.fingerprint for c in canons}
+    assert len(fps) == 3                      # distinct full fingerprints
+    prefixes = {c.prefix_fingerprint for c in canons}
+    assert len(prefixes) == 1                 # one shared join structure
+
+
+def test_prefix_fingerprint_invariant_under_renaming(tpch):
+    _, schema = tpch
+    a = canonicalize(parse_sql(DASH_SUM, schema))
+    b = canonicalize(parse_sql(DASH_SUM_RENAMED, schema))
+    assert a.fingerprint == b.fingerprint
+    assert a.prefix_fingerprint == b.prefix_fingerprint
+
+
+def test_prefix_fingerprint_distinguishes_structure(tpch):
+    _, schema = tpch
+    base = prefix_fingerprint(parse_sql(DASH_SUM, schema))
+    assert base != prefix_fingerprint(parse_sql(DASH_SUM_OTHER_SEL, schema))
+    assert base != prefix_fingerprint(parse_sql(FIG1, schema))
+
+
+def test_prefix_fingerprint_opaque_selections_never_share():
+    q1 = AggQuery(
+        atoms=(Atom("part", "p", ("pk", "price")),),
+        aggregates=(Agg("count"),),
+        selections={"p": lambda c: c["p_price"] > 100})
+    q2 = AggQuery(
+        atoms=(Atom("part", "p", ("pk", "price")),),
+        aggregates=(Agg("sum", "price"),),
+        selections={"p": lambda c: c["p_price"] > 100})
+    c1, c2 = canonicalize(q1), canonicalize(q2)
+    assert c1.prefix_fingerprint != c2.prefix_fingerprint
+    # ...but stable for repeat submissions of the same object
+    assert canonicalize(q1).prefix_fingerprint == c1.prefix_fingerprint
+
+
+# ---------------------------------------------------------------------------
+# plan segmentation
+# ---------------------------------------------------------------------------
+def test_segment_plan_splits_at_aggregate_boundary(tpch):
+    _, schema = tpch
+    plan = plan_query(parse_sql(DASH_MINMAX, schema), schema)
+    seg = segment_plan(plan)
+    assert seg.prefix_key is not None
+    assert not any(isinstance(op, FinalAggOp) for op in seg.prefix_ops)
+    assert all(isinstance(op, FinalAggOp) for op in seg.suffix_ops)
+    assert len(seg.prefix_ops) + len(seg.suffix_ops) == len(plan.ops)
+
+
+def test_segment_plan_prefix_keys_shared_across_canonical_queries(tpch):
+    _, schema = tpch
+    keys = set()
+    for sql in DASHBOARD:
+        canon = canonicalize(parse_sql(sql, schema))
+        keys.add(segment_plan(plan_query(canon.query, schema)).prefix_key)
+    assert len(keys) == 1
+    other = canonicalize(parse_sql(DASH_SUM_OTHER_SEL, schema))
+    assert segment_plan(
+        plan_query(other.query, schema)).prefix_key not in keys
+
+
+def test_segment_plan_materialising_plans_not_shareable(tpch):
+    _, schema = tpch
+    plan = plan_query(parse_sql(DASH_SUM, schema), schema, mode="ref")
+    assert any(isinstance(op, MaterializeJoinOp) for op in plan.ops)
+    assert segment_plan(plan).prefix_key is None
+
+
+def test_op_result_keys_alias_and_variable_blind(tpch):
+    """Two canonical plans for different aggregates over the same joins
+    produce the same prefix-op keys despite role-sensitive variable
+    naming."""
+    _, schema = tpch
+    plans = [plan_query(canonicalize(parse_sql(sql, schema)).query, schema)
+             for sql in (DASH_MINMAX, DASH_SUM)]
+    keysets = [{k for k in op_result_keys(p) if k is not None}
+               for p in plans]
+    assert keysets[0] == keysets[1]
+
+
+# ---------------------------------------------------------------------------
+# multi-query compilation
+# ---------------------------------------------------------------------------
+def test_compile_multi_matches_individual_compiles(tpch):
+    db, schema = tpch
+    plans = [plan_query(parse_sql(sql, schema), schema) for sql in DASHBOARD]
+    ex = Executor(db, schema)
+    fused = ex.compile_multi(plans)(db)
+    assert len(fused) == len(plans)
+    for plan, got in zip(plans, fused):
+        want = ex.compile(plan)(db)
+        _assert_values_equal(dict(want), dict(got))
+
+
+def test_compile_multi_rejects_materialising_plans(tpch):
+    db, schema = tpch
+    good = plan_query(parse_sql(DASH_SUM, schema), schema)
+    bad = plan_query(parse_sql(DASH_SUM, schema), schema, mode="ref")
+    with pytest.raises(ValueError, match="materialises"):
+        Executor(db, schema).compile_multi([good, bad])
+    with pytest.raises(ValueError, match="at least one"):
+        Executor(db, schema).compile_multi([])
+
+
+# ---------------------------------------------------------------------------
+# the serving tier's fusion path
+# ---------------------------------------------------------------------------
+def test_service_fuses_prefix_sharing_fingerprints(tpch):
+    db, schema = tpch
+    svc = QueryService(db, schema)
+    batch = DASHBOARD + [FIG1]
+    results = svc.submit_many(batch)
+    m = svc.metrics()
+    # one fused program for the dashboard trio + one single for FIG1
+    assert m["compiles"] == 2
+    assert m["fused_compiles"] == 1
+    assert m["fused_batches"] == 1
+    assert m["fused_queries"] == 3
+    assert m["fused_prefix_saved"] == 2
+    for r in results[:3]:
+        assert r.stats.fused and r.stats.fused_group_size == 3
+    assert not results[3].stats.fused
+
+    # answers match individual serving bitwise
+    solo_svc = QueryService(db, schema)
+    for r, sql in zip(results, batch):
+        _assert_values_equal(r.values, solo_svc.submit(sql).values)
+
+    # a repeat dashboard hits the fused executable cache: zero compiles
+    again = svc.submit_many(batch)
+    m2 = svc.metrics()
+    assert m2["compiles"] == 2
+    assert m2["fused_hits"] >= 1
+    assert again[0].stats.exec_cache_hit
+    for r, sql in zip(again, batch):
+        _assert_values_equal(r.values, solo_svc.submit(sql).values)
+
+
+def test_service_fused_order_independent(tpch):
+    """Any member order maps to the same fused cache entry."""
+    db, schema = tpch
+    svc = QueryService(db, schema)
+    svc.submit_many(DASHBOARD)
+    compiles = svc.metrics()["compiles"]
+    svc.submit_many(list(reversed(DASHBOARD)))
+    m = svc.metrics()
+    assert m["compiles"] == compiles
+    assert m["fused_hits"] >= 1
+
+
+def test_service_fused_mixed_with_duplicates(tpch):
+    """Duplicate fingerprints inside a fused batch still dedup first."""
+    db, schema = tpch
+    svc = QueryService(db, schema)
+    batch = [DASH_MINMAX, DASH_SUM, DASH_SUM_RENAMED, DASH_MINMAX]
+    results = svc.submit_many(batch)
+    m = svc.metrics()
+    assert m["dedup_saved"] == 2
+    assert m["fused_queries"] == 2          # two distinct fingerprints
+    assert m["compiles"] == m["fused_compiles"] == 1
+    # same answer, renamed to each request's own aliases
+    np.testing.assert_array_equal(
+        np.asarray(results[1].values["sum(s.s_acctbal)"]),
+        np.asarray(results[2].values["sum(su.s_acctbal)"]))
+    shared = [r.stats.shared_execution for r in results]
+    assert shared == [False, False, True, True]
+
+
+def test_service_fused_invalidation_on_bucket_crossing(tpch):
+    db, schema = tpch
+    svc = QueryService(db, schema)
+    svc.submit_many(DASHBOARD)
+    compiles = svc.metrics()["compiles"]
+
+    # grow supplier past its shape bucket → fused program must recompile
+    sup = db["supplier"]
+    cap = sup.capacity
+    rng = np.random.default_rng(0)
+    idx = rng.integers(0, cap, cap + 1)     # 40 rows → 81: bucket 64 → 128
+    grown = {name: np.concatenate([np.asarray(col),
+                                   np.asarray(col)[idx]])
+             for name, col in sup.columns.items()}
+    svc.update_table("supplier", Table.from_numpy(grown))
+    m = svc.metrics()
+    assert m["bucket_invalidations"] >= 1
+
+    results = svc.submit_many(DASHBOARD)
+    m2 = svc.metrics()
+    assert m2["compiles"] == compiles + 1   # one fused recompile
+    solo = QueryService({**db, "supplier": Table.from_numpy(grown)}, schema)
+    for r, sql in zip(results, DASHBOARD):
+        _assert_values_equal(r.values, solo.submit(sql).values)
+
+
+def test_service_eager_values_carry_no_stats_sentinel():
+    """Regression: the executor's ``__stats__`` sentinel must not leak
+    into QueryResult.values (stats travel via ServeStats.exec_stats)."""
+    db, schema = make_stats_db(n_users=20, n_posts=50, n_comments=120,
+                               n_votes=40, seed=1)
+    svc = QueryService(db, schema)
+    q = AggQuery(
+        atoms=(Atom("posts", "po", ("pid", "uid", "score")),
+               Atom("comments", "co", ("pid", "cuid", "cscore"))),
+        aggregates=(Agg("median", "score"), Agg("median", "cscore")))
+    res = svc.submit(q)
+    assert res.stats.mode == "ref"
+    assert "__stats__" not in res.values
+    assert all(k in res.values for k in ("median(score)", "median(cscore)"))
+    assert res.stats.exec_stats is not None
+    assert res.stats.exec_stats.peak_tuples > 0

@@ -57,6 +57,37 @@ def test_fingerprint_distinguishes_literals_and_structure():
     assert min_only != max_only
 
 
+def _supplier_nation_query(v: dict[str, str], order=(0, 1)) -> AggQuery:
+    """MIN over supplier⋈nation with caller-chosen variable names and atom
+    order — structurally one query."""
+    atoms = [Atom("supplier", "s", (v["sk"], v["nk"], v["bal"])),
+             Atom("nation", "n", (v["nk"], v["rk"]))]
+    return AggQuery(
+        atoms=tuple(atoms[i] for i in order),
+        aggregates=(Agg("min", v["bal"]),),
+        selections={"n": lambda c: c["n_regionkey"] > 1},
+        selection_specs={"n": ((">", "n_regionkey", 1),)})
+
+
+def test_fingerprint_invariant_under_variable_renaming_and_atom_order():
+    base = _supplier_nation_query(
+        {"sk": "sk", "nk": "nk", "bal": "bal", "rk": "rk"})
+    renamed = _supplier_nation_query(
+        {"sk": "x1", "nk": "x2", "bal": "x3", "rk": "x4"}, order=(1, 0))
+    ca, cb = canonicalize(base), canonicalize(renamed)
+    assert ca.fingerprint == cb.fingerprint
+    assert ca.prefix_fingerprint == cb.prefix_fingerprint
+    # structurally different: aggregate over a different variable
+    other = AggQuery(
+        atoms=base.atoms,
+        aggregates=(Agg("min", "sk"),),
+        selections=dict(base.selections),
+        selection_specs=dict(base.selection_specs))
+    assert canonicalize(other).fingerprint != ca.fingerprint
+    # ...but the join structure is the same → prefix fingerprint shared
+    assert canonicalize(other).prefix_fingerprint == ca.prefix_fingerprint
+
+
 def test_fingerprint_opaque_selections_never_share():
     """Hand-built queries with closure-only selections are singletons."""
     q1 = AggQuery(

@@ -1,0 +1,41 @@
+"""Table substrate edge cases: construction validation and schema
+metadata lookups (serving-tier correctness satellites)."""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.tables.table import ColumnMeta, RelSchema, Table
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_from_numpy_rejects_capacity_below_data():
+    """Regression: capacity < n used to compute a negative pad and die
+    inside jnp.concatenate with a confusing shape error."""
+    data = {"a": np.arange(10, dtype=np.int32)}
+    with pytest.raises(ValueError, match="below data length"):
+        Table.from_numpy(data, capacity=5)
+
+
+def test_from_numpy_capacity_pads_with_dead_rows():
+    data = {"a": np.arange(4, dtype=np.int32)}
+    tab = Table.from_numpy(data, capacity=8)
+    assert tab.capacity == 8
+    assert int(tab.live_count()) == 4
+    np.testing.assert_array_equal(np.asarray(tab.freq),
+                                  [1, 1, 1, 1, 0, 0, 0, 0])
+    # capacity == n is the no-pad fast path
+    assert Table.from_numpy(data, capacity=4).capacity == 4
+
+
+def test_is_unique_raises_on_unknown_column():
+    """Regression: a typo in FK/PK metadata used to be skipped silently,
+    flipping §4.3 pre-grouping decisions without any error."""
+    rel = RelSchema("part", (ColumnMeta("p_partkey", unique=True),
+                             ColumnMeta("p_price")))
+    assert rel.is_unique(["p_partkey"])
+    assert rel.is_unique(["p_price", "p_partkey"])
+    assert not rel.is_unique(["p_price"])
+    with pytest.raises(KeyError, match="p_partkye"):
+        rel.is_unique(["p_partkye"])        # typo'd name must raise
