@@ -18,7 +18,7 @@ import numpy as np
 from repro.core import Executor, MaterialisationLimit, plan_query
 from repro.core.query import Agg, AggQuery, Atom
 from repro.data import make_stats_db, make_tpch_db
-from repro.data.relational import stats_count_query, tpch_v1_query
+from repro.data.relational import tpch_v1_query
 
 OOM_GUARD = 20_000_000
 

@@ -26,18 +26,13 @@ import argparse      # noqa: E402
 import dataclasses   # noqa: E402
 import json          # noqa: E402
 
-import jax           # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 
 from repro.configs import SHAPES, get_config  # noqa: E402
 from repro.launch.dryrun import lower_train_cell  # noqa: E402
 from repro.launch.mesh import make_production_mesh  # noqa: E402
 from benchmarks.roofline import (  # noqa: E402
-    HBM_BW,
-    ICI_BW,
-    PEAK_FLOPS,
     collective_seconds,
-    model_flops,
 )
 
 
@@ -45,7 +40,6 @@ def lower_variant(arch, shape, *, microbatch=None, rules=None,
                   opt_dtype="float32", probes=True):
     """Lower a train-cell variant; return terms + memory."""
     import repro.training.step as step_mod
-    from repro.training import optimizer as opt_mod
 
     cfg = get_config(arch)
     cell = SHAPES[shape]

@@ -38,7 +38,6 @@ import dataclasses   # noqa: E402
 import json          # noqa: E402
 import re            # noqa: E402
 
-import jax           # noqa: E402
 
 from repro.configs import ARCHS, SHAPES, cells_for, get_config  # noqa: E402
 from repro.launch.dryrun import _LOWER  # noqa: E402

@@ -9,16 +9,21 @@ measures the properties the serving tier exists for:
      (shape bucketing + freq-masked padding), verified via cache counters;
   3. micro-batched throughput on a skewed request mix (dashboards repeat
      the same handful of fingerprints);
-  4. cross-fingerprint fusion: a dashboard of N *distinct* queries sharing
-     scan/semi-join prefixes served via one ``submit_many`` must beat
-     serving them individually on total XLA compiles AND wall-clock, with
-     bitwise-identical answers per query.
+  4. cross-fingerprint fusion: a dashboard of N *distinct* queries whose
+     plan DAGs overlap served via one ``submit_many`` must beat serving
+     them individually on total XLA compiles AND wall-clock, with
+     bitwise-identical answers per query;
+  5. partial fusion across join shapes: a workload where every whole plan
+     prefix is distinct (so PR 2's equal-prefix rule fuses nothing) must
+     still fuse via shared subplans — gated on the ``partial_fusions`` and
+     ``subplan_saved`` counters.
 
     PYTHONPATH=src python benchmarks/serving_queries.py [--tiny] [--smoke]
 
-``--smoke`` runs only the fused-batching scenario on tiny tables and
-asserts cache/fusion counters and answer identity (no timing gates) —
-what ``scripts/verify.sh`` runs so serving regressions fail CI fast.
+``--smoke`` runs only the fused-batching + mixed-shape scenarios on tiny
+tables and asserts cache/fusion counters and answer identity (no timing
+gates) — what ``scripts/verify.sh --smoke`` runs so serving regressions
+fail CI fast.
 """
 
 from __future__ import annotations
@@ -87,8 +92,11 @@ DISTINCT_QUERIES = [
 # N distinct queries over shared dimension joins.  Family A: four aggregates
 # over supplier⋈nation⋈region with identical selections (one shared
 # semi-join prefix); family B: two over partsupp⋈part (a second prefix);
-# plus the 5-way FIG1 as a loner that fuses with nothing.  Fused serving
-# should cost 3 compiles (A, B, FIG1) instead of 7.
+# plus the 5-way FIG1, whose join shape matches nobody but whose DAG
+# overlaps family A on the filtered region scan + nation/supplier semi-join
+# chain.  Subplan-overlap grouping therefore fuses {A ∪ FIG1} and {B}:
+# 2 compiles instead of 7, with the A∪FIG1 program counted as a *partial*
+# fusion (its members do not share one whole prefix).
 _SUPP_DIMS = """FROM supplier s, nation n, region r
 WHERE s.s_nationkey = n.n_nationkey AND n.n_regionkey = r.r_regionkey
   AND r.r_name IN (2, 3)"""
@@ -105,9 +113,30 @@ DASHBOARD_QUERIES = [
                      f"{_PART_DIMS} GROUP BY ps.ps_suppkey"),
     ("dash-fig1", FIG1),
 ]
-DASHBOARD_FUSION_SETS = 3     # A-family, B-family, FIG1 singleton
+DASHBOARD_FUSION_SETS = 2     # {A-family ∪ FIG1}, {B-family}
 DASHBOARD_FUSED_PROGRAMS = 2  # fusion sets with ≥ 2 members
-DASHBOARD_FUSED_QUERIES = 6   # members of the two multi-query programs
+DASHBOARD_FUSED_QUERIES = 7   # members of the two multi-query programs
+
+# ---- mixed-JOIN-SHAPE dashboard (partial fusion) ---------------------------
+# Four queries whose whole plan prefixes are pairwise DISTINCT — under
+# PR 2's equal-prefix rule nothing here fuses, ever — but whose op DAGs
+# overlap: the 3/4/5-way queries share the filtered region scan and the
+# nation/supplier semi-join chain, and the 2-way query shares the filtered
+# part scan + partsupp semi-join with the 5-way.  Overlap grouping is
+# transitive, so the op-graph executor compiles ALL FOUR into one program.
+MIX_3WAY = f"SELECT MIN(s.s_acctbal) {_SUPP_DIMS}"
+MIX_4WAY = """SELECT MIN(s.s_acctbal), MAX(s.s_acctbal)
+FROM supplier s, nation n, region r, partsupp ps
+WHERE s.s_nationkey = n.n_nationkey AND n.n_regionkey = r.r_regionkey
+  AND s.s_suppkey = ps.ps_suppkey AND r.r_name IN (2, 3)"""
+MIX_2WAY = """SELECT SUM(ps.ps_supplycost) FROM partsupp ps, part p
+WHERE ps.ps_partkey = p.p_partkey AND p.p_price > 1200.0"""
+MIXED_SHAPE_QUERIES = [
+    ("mix-3way", MIX_3WAY),
+    ("mix-4way", MIX_4WAY),
+    ("mix-5way", FIG1),
+    ("mix-2way", MIX_2WAY),
+]
 
 
 def _values_equal(a: dict, b: dict) -> bool:
@@ -259,6 +288,78 @@ def check_fused(rf: dict) -> list[str]:
     if m["fused_hits"] < (rf["repeats"] - 1) * DASHBOARD_FUSED_PROGRAMS:
         fails.append(f"fused executable cache hits {m['fused_hits']} — "
                      "repeat dashboards are not reusing fused programs")
+    if m["partial_fusions"] < rf["repeats"]:
+        fails.append(f"partial_fusions={m['partial_fusions']} — FIG1 is "
+                     "not being fused into the A-family program")
+    if m["subplan_saved"] <= 0:
+        fails.append("subplan_saved=0 — the fused trace memo deduped "
+                     "nothing")
+    return fails
+
+
+def run_mixed(scale: int = 1000, repeats: int = 3, seed: int = 0):
+    """Mixed-JOIN-SHAPE dashboard: whole-prefix fusion (PR 2's rule) finds
+    zero fusable pairs here, the op-graph executor fuses everything.
+    Served individually vs via ``submit_many``; returns walls, compile
+    counts, identity, whole-prefix diversity, and fused metrics."""
+    from repro.core import plan_query, segment_plan
+    from repro.service import canonicalize
+    from repro.core.sql import parse_sql
+
+    db, schema = make_tpch_db(scale=scale, seed=seed)
+    sqls = [sql for _, sql in MIXED_SHAPE_QUERIES]
+
+    # document the premise: every member has a DIFFERENT whole prefix
+    prefixes = {
+        segment_plan(plan_query(canonicalize(parse_sql(s, schema)).query,
+                                schema)).prefix_key for s in sqls}
+
+    svc_solo = QueryService(db, schema)
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        solo = [svc_solo.submit(sql) for sql in sqls]
+    solo_s = time.perf_counter() - t0
+
+    svc_fused = QueryService(db, schema)
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        fused = svc_fused.submit_many(sqls)
+    fused_s = time.perf_counter() - t0
+
+    identical = all(_values_equal(a.values, b.values)
+                    for a, b in zip(solo, fused))
+    return {
+        "queries": len(sqls),
+        "repeats": repeats,
+        "distinct_prefixes": len(prefixes),
+        "solo_s": solo_s,
+        "fused_s": fused_s,
+        "solo_compiles": svc_solo.metrics()["compiles"],
+        "fused_compiles": svc_fused.metrics()["compiles"],
+        "identical": identical,
+        "fused_metrics": svc_fused.metrics(),
+    }
+
+
+def check_mixed(rm: dict) -> list[str]:
+    """Gate the mixed-shape scenario; returns failures."""
+    fails = []
+    m = rm["fused_metrics"]
+    if rm["distinct_prefixes"] != rm["queries"]:
+        fails.append(f"premise broken: {rm['distinct_prefixes']} distinct "
+                     f"prefixes over {rm['queries']} queries — whole-prefix "
+                     "fusion would not be zero here")
+    if not rm["identical"]:
+        fails.append("mixed-shape fused answers differ from individual "
+                     "serving")
+    if rm["fused_compiles"] >= rm["solo_compiles"]:
+        fails.append(f"mixed-shape fused used {rm['fused_compiles']} "
+                     f"compiles, individual used {rm['solo_compiles']}")
+    if m["partial_fusions"] < rm["repeats"]:
+        fails.append(f"partial_fusions={m['partial_fusions']} < "
+                     f"{rm['repeats']} — different join shapes not fusing")
+    if m["subplan_saved"] <= 0:
+        fails.append("subplan_saved=0 on the mixed-shape workload")
     return fails
 
 
@@ -289,12 +390,30 @@ def main(argv=None):
     print(f"  identical={rf['identical']} "
           f"fused_batches={m['fused_batches']} "
           f"fused_queries={m['fused_queries']} "
-          f"prefix_saved={m['fused_prefix_saved']} "
+          f"partial_fusions={m['partial_fusions']} "
+          f"subplan_saved={m['subplan_saved']} "
           f"fused cache {m['fused_hits']}/{m['fused_hits'] + m['fused_misses']} hit")
     fused_fails = check_fused(rf)
     if not args.smoke and rf["fused_s"] >= rf["solo_s"]:
         fused_fails.append(f"fused wall {rf['fused_s']:.3f}s not below "
                            f"individual {rf['solo_s']:.3f}s")
+
+    rm = run_mixed(scale=scale, repeats=2 if tiny else 3)
+    mm = rm["fused_metrics"]
+    print(f"mixed join shapes {rm['queries']} queries, "
+          f"{rm['distinct_prefixes']} distinct whole prefixes "
+          f"(whole-prefix fusion: zero) × {rm['repeats']} rounds")
+    print(f"  individual      {rm['solo_s'] * 1e3:>10.1f} ms "
+          f"({rm['solo_compiles']} compiles)")
+    print(f"  fused           {rm['fused_s'] * 1e3:>10.1f} ms "
+          f"({rm['fused_compiles']} compiles)")
+    print(f"  identical={rm['identical']} "
+          f"partial_fusions={mm['partial_fusions']} "
+          f"subplan_saved={mm['subplan_saved']}")
+    fused_fails += check_mixed(rm)
+    if not args.smoke and rm["fused_s"] >= rm["solo_s"]:
+        fused_fails.append(f"mixed-shape fused wall {rm['fused_s']:.3f}s "
+                           f"not below individual {rm['solo_s']:.3f}s")
     if args.smoke:
         for f in fused_fails:
             print(f"FAIL: {f}")

@@ -95,10 +95,14 @@ def serving_example():
     print(f"[serve] batch of 3 → shared runs: "
           f"{[r.stats.shared_execution for r in batch]}")
 
-    # cross-fingerprint fusion: DIFFERENT queries over the same dimension
-    # joins (here: three aggregates over supplier⋈nation⋈region) share a
-    # scan/semi-join prefix, so submit_many compiles and runs them as ONE
-    # XLA program — one compile and one prefix execution instead of three
+    # cross-fingerprint fusion: DIFFERENT queries whose plan DAGs overlap
+    # are compiled and run as ONE XLA program.  Overlap is judged on
+    # content-addressed subplan keys (PhysicalPlan.subplan_keys), so even
+    # different JOIN SHAPES fuse: the three dashboard queries below share
+    # their whole supplier⋈nation⋈region prefix, while the 5-way Fig. 1
+    # query shares only the filtered region scan + the first two
+    # semi-joins — and all four still land in one program that computes
+    # each shared sub-DAG exactly once ("partial fusion").
     dims = """FROM supplier s, nation n, region r
         WHERE s.s_nationkey = n.n_nationkey
           AND n.n_regionkey = r.r_regionkey AND r.r_name IN (2, 3)"""
@@ -107,6 +111,7 @@ def serving_example():
         f"SELECT SUM(s.s_acctbal) {dims}",
         f"SELECT COUNT(*) AS cnt, AVG(s.s_acctbal) AS avg {dims} "
         "GROUP BY s.s_nationkey",
+        sql,                                 # the 5-way Fig. 1 query
     ]
     fused = svc.submit_many(dashboard)
     print(f"[serve] fused dashboard of {len(dashboard)}: "
@@ -118,7 +123,18 @@ def serving_example():
           f"plan hits/misses={m['plan_hits']}/{m['plan_misses']} "
           f"exec hits/misses={m['exec_hits']}/{m['exec_misses']} "
           f"fused_queries={m['fused_queries']} "
-          f"prefix_saved={m['fused_prefix_saved']}")
+          f"partial_fusions={m['partial_fusions']} "
+          f"subplan_saved={m['subplan_saved']}")
+
+    # why they fuse is inspectable: each plan prints its op DAG with
+    # content-addressed node keys — equal keys = shared sub-DAGs
+    from repro.core import parse_sql, plan_query
+    from repro.service import canonicalize
+    print("\n[serve] op DAGs — the 3-way and 5-way plans print the same "
+          "keys for the region scan and the first two semi-joins:")
+    for s in (dashboard[1], sql):
+        plan = plan_query(canonicalize(parse_sql(s, schema)).query, schema)
+        print(plan.describe())
 
 
 def sql_example():

@@ -1,0 +1,119 @@
+#!/usr/bin/env python
+"""Lint step for scripts/verify.sh.
+
+Prefers ruff, then pyflakes (whichever the environment provides); when
+neither is installed it degrades — visibly — to a built-in check that
+still catches the common breakage classes a refactor leaves behind:
+syntax errors (via compile()) and unused imports (via ast).
+
+    python scripts/lint.py [paths...]       # default: src tests benchmarks
+                                            #          examples scripts
+"""
+
+from __future__ import annotations
+
+import ast
+import pathlib
+import re
+import subprocess
+import sys
+
+_IDENT = re.compile(r"[A-Za-z_][A-Za-z0-9_]*")
+
+DEFAULT_PATHS = ("src", "tests", "benchmarks", "examples", "scripts")
+
+
+def _external(tool_args: list[str], paths: list[str]) -> int | None:
+    """Run an external linter if importable; None means unavailable."""
+    probe = subprocess.run([sys.executable, "-m", tool_args[0], "--version"],
+                           capture_output=True)
+    if probe.returncode != 0:
+        return None
+    print(f"lint: using {' '.join(tool_args)}")
+    return subprocess.run([sys.executable, "-m", *tool_args, *paths]).returncode
+
+
+def _py_files(paths: list[str]) -> list[pathlib.Path]:
+    out: list[pathlib.Path] = []
+    for p in paths:
+        path = pathlib.Path(p)
+        if path.is_dir():
+            out.extend(sorted(path.rglob("*.py")))
+        elif path.suffix == ".py":
+            out.append(path)
+    return [p for p in out if "__pycache__" not in p.parts]
+
+
+def _unused_imports(tree: ast.Module) -> list[tuple[int, str]]:
+    """Names imported at module level but never referenced.  Conservative:
+    re-export modules (``__all__`` present or __init__-style) and
+    ``import x as x`` re-export idiom are exempted by the caller."""
+    imported: dict[str, int] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                name = (a.asname or a.name).split(".")[0]
+                imported[name] = node.lineno
+        elif isinstance(node, ast.ImportFrom):
+            if node.module == "__future__":
+                continue  # compiler directive, not a binding to "use"
+            for a in node.names:
+                if a.name == "*":
+                    continue
+                imported[a.asname or a.name] = node.lineno
+    used: set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Name):
+            used.add(node.id)
+        elif isinstance(node, ast.Attribute):
+            base = node
+            while isinstance(base, ast.Attribute):
+                base = base.value
+            if isinstance(base, ast.Name):
+                used.add(base.id)
+        elif isinstance(node, ast.Constant) and isinstance(node.value, str):
+            # string annotations / doctest snippets reference names
+            # textually — treat any identifier-ish token inside as a use
+            used.update(_IDENT.findall(node.value))
+    return [(ln, name) for name, ln in sorted(imported.items(),
+                                              key=lambda kv: kv[1])
+            if name not in used]
+
+
+def _builtin_lint(paths: list[str]) -> int:
+    print("lint: ruff/pyflakes not installed — built-in syntax + "
+          "unused-import check")
+    failures = 0
+    for f in _py_files(paths):
+        src = f.read_text()
+        try:
+            tree = ast.parse(src, filename=str(f))
+            compile(src, str(f), "exec")
+        except SyntaxError as e:
+            print(f"{f}:{e.lineno}: syntax error: {e.msg}")
+            failures += 1
+            continue
+        has_all = any(isinstance(n, ast.Assign) and any(
+            isinstance(t, ast.Name) and t.id == "__all__" for t in n.targets)
+            for n in tree.body)
+        if f.name == "__init__.py" or has_all:
+            continue  # re-export surface: unused-import check not meaningful
+        for ln, name in _unused_imports(tree):
+            print(f"{f}:{ln}: unused import {name!r}")
+            failures += 1
+    return 1 if failures else 0
+
+
+def main(argv: list[str]) -> int:
+    paths = argv or [p for p in DEFAULT_PATHS if pathlib.Path(p).exists()]
+    rc = _external(["ruff", "check"], paths)
+    if rc is None:
+        rc = _external(["pyflakes"], paths)
+    if rc is None:
+        rc = _builtin_lint(paths)
+    print("lint: OK" if rc == 0 else "lint: FAIL")
+    return rc
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

@@ -1,16 +1,30 @@
 #!/usr/bin/env bash
 # Tier-1 verify + serving smoke: what CI runs and what every PR must keep
-# green.  Usage: scripts/verify.sh
+# green.
+#
+#   scripts/verify.sh            # lint + full pytest + tiny serving bench
+#   scripts/verify.sh --smoke    # lint + fusion-counter smoke only (fast):
+#                                # asserts the fused-dashboard counters AND
+#                                # partial_fusions > 0 / subplan_saved > 0
+#                                # on the mixed-join-shape workload
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+echo "== lint (ruff/pyflakes, or built-in fallback) =="
+python scripts/lint.py
+
+if [[ "${1:-}" == "--smoke" ]]; then
+  echo "== smoke: fused + mixed-join-shape counters =="
+  python benchmarks/serving_queries.py --smoke
+  exit 0
+fi
+
 echo "== tier-1: pytest =="
 python -m pytest -x -q
 
-# tiny tables; gates cache counters, fused-batching counters + answer
-# identity, warm speedup, and zero same-bucket recompiles.  For an even
-# faster counters-only pass use `--smoke` instead.
-echo "== smoke: serving benchmark (tiny, incl. fused counters) =="
+# tiny tables; gates cache counters, fused-batching + partial-fusion
+# counters, answer identity, warm speedup, and zero same-bucket recompiles.
+echo "== smoke: serving benchmark (tiny, incl. fusion counters) =="
 python benchmarks/serving_queries.py --tiny

@@ -4,10 +4,22 @@ rewrites (§4), frequency-propagating executor with the FreqJoin physical
 operator (§5), and the shard_map distributed engine.
 """
 
-from repro.core.executor import ExecStats, Executor, MaterialisationLimit
+from repro.core.executor import (
+    ExecStats,
+    Executor,
+    MaterialisationLimit,
+    shared_subplan_savings,
+)
 from repro.core.hypergraph import JoinTree, build_join_tree
 from repro.core.oma import Classification, classify
-from repro.core.plan import PhysicalPlan, PlanSegments, segment_plan
+from repro.core.plan import (
+    PhysicalPlan,
+    PlanNode,
+    PlanSegments,
+    op_result_keys,
+    rewrite_dag,
+    segment_plan,
+)
 from repro.core.query import Agg, AggQuery, Atom
 from repro.core.rewrite import plan_query
 from repro.core.sql import parse_sql, SqlError
@@ -21,9 +33,13 @@ __all__ = [
     "build_join_tree",
     "JoinTree",
     "PhysicalPlan",
+    "PlanNode",
     "PlanSegments",
+    "op_result_keys",
     "plan_query",
+    "rewrite_dag",
     "segment_plan",
+    "shared_subplan_savings",
     "parse_sql",
     "SqlError",
     "Executor",

@@ -16,8 +16,6 @@ relation + segmented reductions — never by materialising groups.
 
 from __future__ import annotations
 
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 

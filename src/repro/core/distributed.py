@@ -31,7 +31,6 @@ grouping reuses the same segmented machinery.
 
 from __future__ import annotations
 
-import functools
 from typing import Sequence
 
 import jax

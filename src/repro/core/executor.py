@@ -1,6 +1,7 @@
-"""Plan executor over the fixed-shape columnar substrate.
+"""Graph interpreter over the fixed-shape columnar substrate.
 
-Two execution surfaces with deliberately different option sets:
+Both execution surfaces interpret the plan's op DAG (``PhysicalPlan.root``
+/ ``nodes``), with deliberately different option sets:
 
   * ``execute``  — eager, runs every plan class; materialising ops (ref/opt
     baselines) use dynamic shapes the way a row engine would, and the
@@ -16,6 +17,13 @@ Two execution surfaces with deliberately different option sets:
     ``oom_guard`` refuses to compile rather than silently dropping the
     guard.  Padded tables (``Table.pad_to``) run through compiled plans
     unchanged: every operator masks by frequency, so dead rows are inert.
+
+Under tracing, node results are memoised by their content keys
+(``PlanNode.key``): a key hit reuses the already-traced frequency vector
+instead of re-tracing the kernels.  ``compile_multi`` shares one memo
+across *all* member plans, so any sub-DAG two members have in common — a
+filtered dimension scan, a semi-join chain, even when the enclosing join
+shapes differ — is computed exactly once in the fused XLA program.
 
 An ``oom_guard`` bounds materialisation for the baselines: exceeding it
 raises ``MaterialisationLimit`` (reported as the paper's X entries).
@@ -36,9 +44,9 @@ from repro.core.plan import (
     FreqJoinOp,
     MaterializeJoinOp,
     PhysicalPlan,
+    PlanNode,
     ScanOp,
     SemiJoinOp,
-    op_result_keys,
 )
 from repro.kernels import ops as kops
 from repro.tables.table import Schema, Table, pack_keys
@@ -119,55 +127,79 @@ class Executor:
                 domain *= d
         return key, domain
 
+    def _semi_join(self, plan: PhysicalPlan, op: SemiJoinOp,
+                   p: _State, c: _State) -> _State:
+        pk, _pd = self._key(plan, op.parent, p, op.on_vars)
+        ck, cdom = self._key(plan, op.child, c, op.on_vars)
+        freq = kops.semi_join(pk, p.freq, ck, c.freq,
+                              backend=self.backend,
+                              interpret=self.interpret,
+                              domain=cdom)
+        return _State(p.cols, freq)
+
+    def _freq_join(self, plan: PhysicalPlan, op: FreqJoinOp,
+                   p: _State, c: _State) -> _State:
+        pk, _pd = self._key(plan, op.parent, p, op.on_vars)
+        ck, cdom = self._key(plan, op.child, c, op.on_vars)
+        cf = c.freq
+        if op.pregroup and cdom is None:
+            ck, cf, _valid = kops.group_by_sum(
+                ck, cf, backend=self.backend, interpret=self.interpret)
+        freq = kops.freq_join(pk, p.freq, ck, cf,
+                              backend=self.backend,
+                              interpret=self.interpret,
+                              domain=cdom)
+        return _State(p.cols, freq)
+
     # ------------------------------------------------------------------
     def execute(self, plan: PhysicalPlan, stats: ExecStats | None = None):
+        """Eager DAG interpretation (every plan class, per-step stats).
+
+        Intermediate states are dropped after their last consumer, so peak
+        host memory tracks the largest live intermediate — matching the
+        linear interpreter this replaced, whose per-alias state slots were
+        overwritten in place (a ref-mode chain of materialising joins must
+        not retain every expanded intermediate until the end)."""
         stats = stats if stats is not None else ExecStats()
-        state: dict[str, _State] = {}
+        consumers: dict[int, int] = {}
+        for node in plan.nodes:
+            for i in node.inputs:
+                consumers[id(i)] = consumers.get(id(i), 0) + 1
+        vals: dict[int, Any] = {}
         results: dict[str, Any] = {}
-        for op in plan.ops:
+        for node in plan.nodes:
+            op = node.op
+            ins = [vals[id(i)] for i in node.inputs]
             if isinstance(op, ScanOp):
-                state[op.alias] = self._scan(plan, op)
-                stats.record(f"scan({op.alias})",
-                             int(jnp.sum(state[op.alias].freq > 0)))
+                st = self._scan(plan, op)
+                stats.record(f"scan({op.alias})", int(jnp.sum(st.freq > 0)))
             elif isinstance(op, SemiJoinOp):
-                p, c = state[op.parent], state[op.child]
-                pk, pdom = self._key(plan, op.parent, p, op.on_vars)
-                ck, cdom = self._key(plan, op.child, c, op.on_vars)
-                p.freq = kops.semi_join(pk, p.freq, ck, c.freq,
-                                        backend=self.backend,
-                                        interpret=self.interpret,
-                                        domain=cdom)
+                st = self._semi_join(plan, op, ins[0], ins[1])
                 stats.record(f"semijoin({op.parent}⋉{op.child})",
-                             int(jnp.sum(p.freq > 0)))
+                             int(jnp.sum(st.freq > 0)))
             elif isinstance(op, FreqJoinOp):
-                p, c = state[op.parent], state[op.child]
-                pk, pdom = self._key(plan, op.parent, p, op.on_vars)
-                ck, cdom = self._key(plan, op.child, c, op.on_vars)
-                cf = c.freq
-                if op.pregroup and cdom is None:
-                    ck, cf, _valid = kops.group_by_sum(
-                        ck, cf, backend=self.backend,
-                        interpret=self.interpret)
-                p.freq = kops.freq_join(pk, p.freq, ck, cf,
-                                        backend=self.backend,
-                                        interpret=self.interpret,
-                                        domain=cdom)
+                st = self._freq_join(plan, op, ins[0], ins[1])
                 stats.record(f"freqjoin({op.parent}⋉ᶠ{op.child})",
-                             int(jnp.sum(p.freq > 0)))
+                             int(jnp.sum(st.freq > 0)))
             elif isinstance(op, MaterializeJoinOp):
-                state[op.parent] = self._materialize_join(plan, op, state,
-                                                          stats)
+                st = self._materialize_join(plan, op, ins[0], ins[1], stats)
             elif isinstance(op, FinalAggOp):
-                results = self._final_agg(plan, op, state[op.root])
+                st = results = self._final_agg(plan, op, ins[0])
             else:  # pragma: no cover
                 raise TypeError(op)
+            vals[id(node)] = st
+            for i in node.inputs:
+                consumers[id(i)] -= 1
+                if consumers[id(i)] == 0:
+                    del vals[id(i)]
+        results = dict(results)
         results["__stats__"] = stats
         return results
 
     # ------------------------------------------------------------------
-    def _materialize_join(self, plan, op: MaterializeJoinOp, state, stats):
+    def _materialize_join(self, plan, op: MaterializeJoinOp,
+                          p: _State, c: _State, stats) -> _State:
         """Eager row-expanding join (the ref/opt baselines)."""
-        p, c = state[op.parent], state[op.child]
         pk = np.asarray(self._key(plan, op.parent, p, op.on_vars)[0])
         ck = np.asarray(self._key(plan, op.child, c, op.on_vars)[0])
         pf = np.asarray(p.freq)
@@ -261,91 +293,93 @@ class Executor:
                 "without oom_guard to compile.")
 
     def _trace_plan(self, db: dict[str, Table], plan: PhysicalPlan,
-                    memo: dict | None = None,
-                    keys: list | None = None) -> dict[str, Any]:
-        """One plan's static op sweep, for use under tracing.
+                    memo: dict | None = None) -> dict[str, Any]:
+        """One plan's DAG evaluation, for use under tracing.
 
-        ``memo`` maps structural op keys (``plan.op_result_keys``) to the
-        frequency vectors already computed this trace: when a key hits, the
-        op's kernels are not traced again and the cached vector is reused —
-        this is how a fused multi-query program runs a shared scan/semi-join
-        prefix exactly once."""
+        ``memo`` maps node content keys (``PlanNode.key``) to the frequency
+        vectors already computed this trace: a key hit reuses the cached
+        vector (only the column views of the node's parent chain are
+        rebuilt — free) and skips tracing the node's kernels AND its entire
+        child sub-DAG.  Shared across plans by ``compile_multi``, this is
+        how a fused multi-query program runs each common sub-DAG exactly
+        once even when the member plans' overall join shapes differ."""
         inner = Executor(db, self.schema, self.freq_dtype,
                          self.backend, self.interpret,
                          dense_domain=self.dense_domain)
-        state: dict[str, _State] = {}
-        results: dict[str, Any] = {}
-        for i, op in enumerate(plan.ops):
-            key = keys[i] if keys is not None and memo is not None else None
+        vals: dict[int, _State] = {}
+
+        def ev(node: PlanNode) -> Any:
+            st = vals.get(id(node))
+            if st is not None:
+                return st
+            op = node.op
+            key = node.key() if memo is not None else None
             if isinstance(op, ScanOp):
                 st = inner._scan(plan, op)
                 if key is not None:
                     if key in memo:
-                        st.freq = memo[key]
+                        st = _State(st.cols, memo[key])
                     else:
                         memo[key] = st.freq
-                state[op.alias] = st
-            elif isinstance(op, SemiJoinOp):
-                p, c = state[op.parent], state[op.child]
+            elif isinstance(op, (SemiJoinOp, FreqJoinOp)):
+                p = ev(node.inputs[0])
                 if key is not None and key in memo:
-                    p.freq = memo[key]
-                    continue
-                pk, _pd = inner._key(plan, op.parent, p, op.on_vars)
-                ck, cdom = inner._key(plan, op.child, c, op.on_vars)
-                p.freq = kops.semi_join(pk, p.freq, ck, c.freq,
-                                        backend=self.backend,
-                                        interpret=self.interpret,
-                                        domain=cdom)
-                if key is not None:
-                    memo[key] = p.freq
-            elif isinstance(op, FreqJoinOp):
-                p, c = state[op.parent], state[op.child]
-                if key is not None and key in memo:
-                    p.freq = memo[key]
-                    continue
-                pk, _pd = inner._key(plan, op.parent, p, op.on_vars)
-                ck, cdom = inner._key(plan, op.child, c, op.on_vars)
-                cf = c.freq
-                if op.pregroup and cdom is None:
-                    ck, cf, _ = kops.group_by_sum(
-                        ck, cf, backend=self.backend,
-                        interpret=self.interpret)
-                p.freq = kops.freq_join(pk, p.freq, ck, cf,
-                                        backend=self.backend,
-                                        interpret=self.interpret,
-                                        domain=cdom)
-                if key is not None:
-                    memo[key] = p.freq
+                    st = _State(p.cols, memo[key])
+                else:
+                    c = ev(node.inputs[1])
+                    st = inner._semi_join(plan, op, p, c) \
+                        if isinstance(op, SemiJoinOp) \
+                        else inner._freq_join(plan, op, p, c)
+                    if key is not None:
+                        memo[key] = st.freq
             elif isinstance(op, FinalAggOp):
-                results = inner._final_agg(plan, op, state[op.root])
-        return results
+                st = inner._final_agg(plan, op, ev(node.inputs[0]))
+            else:  # pragma: no cover — _check_jittable rejects these
+                raise TypeError(op)
+            vals[id(node)] = st
+            return st
+
+        return ev(plan.root)
 
     def compile(self, plan: PhysicalPlan):
         """Jit the static plan classes (oma / opt_plus): db → aggregates."""
         self._check_jittable([plan])
 
         def run(db: dict[str, Table]):
-            return self._trace_plan(db, plan)
+            # a fresh memo still dedups repeated sub-DAGs *within* the plan
+            # (self-joins scanning one relation twice, say)
+            return self._trace_plan(db, plan, memo={})
 
         return jax.jit(run)
 
     def compile_multi(self, plans: list[PhysicalPlan]):
         """Jit several static plans into ONE program: db → [aggregates].
 
-        The member plans' op sweeps share a trace-level memo keyed by
-        ``op_result_keys``, so scans and semi-join/FreqJoin chains that are
-        structurally identical across members (a shared prefix, in
-        ``segment_plan`` terms) are computed once and their frequency
-        vectors fanned out to every member's suffix.  One XLA compilation
+        The member plans' DAG evaluations share a trace-level memo keyed by
+        node content keys, so every sub-DAG that is structurally identical
+        across members — a whole prefix, or just a shared scan/semi-join
+        chain under different join shapes — is computed once and its
+        frequency vector fanned out to every consumer.  One XLA compilation
         serves every member query; results are returned in plan order."""
         if not plans:
             raise ValueError("compile_multi needs at least one plan")
         self._check_jittable(plans)
-        keyed = [(plan, op_result_keys(plan)) for plan in plans]
 
         def run(db: dict[str, Table]):
             memo: dict = {}
-            return [self._trace_plan(db, plan, memo, keys)
-                    for plan, keys in keyed]
+            return [self._trace_plan(db, plan, memo) for plan in plans]
 
         return jax.jit(run)
+
+
+def shared_subplan_savings(plans: list[PhysicalPlan]) -> int:
+    """How many non-trivial subplan evaluations ``compile_multi`` saves by
+    fusing `plans`, versus compiling each alone: the multiset of the
+    members' shareable subplan keys minus its distinct support."""
+    sets = [plan.subplan_keys() for plan in plans]
+    union: set = set()
+    total = 0
+    for s in sets:
+        total += len(s)
+        union |= s
+    return total - len(union)

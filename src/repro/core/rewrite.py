@@ -1,21 +1,39 @@
-"""The planner: rule-based rewrites of logical plans (paper §4).
+"""The planner: a pass pipeline lowering logical queries to the op-graph IR
+(paper §4).
 
-``plan_query`` turns an AggQuery into a PhysicalPlan:
+``plan_query`` turns an AggQuery into a ``PhysicalPlan`` by running a small
+sequence of passes over a shared build state:
 
-  1. GYO → join tree; classify (acyclic / guarded / set-safe / 0MA).
-  2. Re-root the tree at the guard (§4.1).
-  3. mode="auto": 0MA → semi-join sweep; guarded → FreqJoin sweep (Opt⁺);
-     unguarded/cyclic → materialising baseline (the paper's fallback: "when
-     our optimisations are not applicable, execution is not affected").
-  4. FK/PK knowledge (§4.3): an edge whose whole child subtree is FK→PK
-     carries frequency ≡ 1, so the FreqJoin degrades to a semi-join; the
-     child pre-grouping is skipped when the join key is unique in the child.
+  1. ``_pass_classify``   — GYO → join tree; classify (acyclic / guarded /
+                            set-safe / 0MA); resolve ``mode="auto"``
+                            (0MA → semi-join sweep; guarded → FreqJoin
+                            sweep (Opt⁺); unguarded/cyclic → materialising
+                            baseline, the paper's fallback).
+  2. ``_pass_reroot_guard``— re-root the join tree at the guard (§4.1);
+                            join trees are freely re-rootable.
+  3. ``_pass_lower``      — emit the op graph: one scan node per atom
+                            (selections not yet attached), a join node per
+                            tree edge (mode-generic sweep), the final
+                            aggregate node.
+  4. ``_pass_fkpk_degrade``— §4.3 IR rewrite: an edge whose whole child
+                            subtree is FK→PK carries frequency ≡ 1, so the
+                            FreqJoin/materialising join degrades to a
+                            semi-join; child pre-grouping is dropped when
+                            the join key is unique in the child.
+  5. ``_pass_attach_selections`` — rewrite scan nodes to carry the query's
+                            per-alias selections (callable + declarative
+                            spec), which flows into the nodes' content keys.
 
-Modes can be forced (benchmarks compare ref / opt / opt_plus / oma on the
-same query, mirroring the paper's experimental conditions).
+Each pass is ``PlanBuild → PlanBuild`` and the pipeline is the module-level
+``PASSES`` tuple, so new rewrites (e.g. admission-driven batch formation)
+slot in without touching the others.  Modes can be forced (benchmarks
+compare ref / opt / opt_plus / oma on the same query, mirroring the
+paper's experimental conditions).
 """
 
 from __future__ import annotations
+
+import dataclasses
 
 from repro.core.hypergraph import build_join_tree
 from repro.core.oma import classify, edge_is_fk_pk, subtree_all_fk_pk
@@ -24,8 +42,14 @@ from repro.core.plan import (
     FreqJoinOp,
     MaterializeJoinOp,
     PhysicalPlan,
+    PlanNode,
     ScanOp,
     SemiJoinOp,
+    make_final_agg_node,
+    make_join_node,
+    make_materialize_node,
+    make_scan_node,
+    rewrite_dag,
 )
 from repro.core.query import AggQuery
 from repro.tables.table import Schema
@@ -47,32 +71,60 @@ def _key_unique_in(schema: Schema, atom, on_vars, var_cols) -> bool:
     return schema.relations[atom.rel].is_unique(cols)
 
 
-def plan_query(query: AggQuery, schema: Schema, mode: str = "auto",
-               use_fkpk: bool = False) -> PhysicalPlan:
-    cls = classify(query, schema)
+@dataclasses.dataclass
+class PlanBuild:
+    """Mutable state threaded through the pass pipeline."""
+
+    query: AggQuery
+    schema: Schema
+    mode: str                 # resolved after _pass_classify
+    use_fkpk: bool
+    tree: object = None       # JoinTree after _pass_classify
+    guard: str | None = None
+    var_cols: dict = dataclasses.field(default_factory=dict)
+    root: PlanNode | None = None  # FinalAgg node after _pass_lower
+
+
+def _pass_classify(st: PlanBuild) -> PlanBuild:
+    cls = classify(st.query, st.schema)
     if cls.tree is None:
         raise ValueError(
             "cyclic query: out of the paper's guarded-acyclic fragment "
             "(would need hypertree decomposition, see paper §7)")
-    tree = cls.tree
-    var_cols = _var_cols(query, schema)
-
-    if mode == "auto":
+    st.tree = cls.tree
+    st.guard = cls.guard
+    st.var_cols = _var_cols(st.query, st.schema)
+    if st.mode == "auto":
         if cls.is_oma:
-            mode = "oma"
+            st.mode = "oma"
         elif cls.guarded:
-            mode = "opt_plus"
+            st.mode = "opt_plus"
         else:
-            mode = "ref"
-    if mode == "oma" and not cls.is_oma:
+            st.mode = "ref"
+    if st.mode == "oma" and not cls.is_oma:
         raise ValueError("query is not 0MA; cannot force oma mode")
-    if mode in ("opt", "opt_plus") and not cls.guarded:
+    if st.mode in ("opt", "opt_plus") and not cls.guarded:
         raise ValueError("query is not guarded; frequency propagation "
                          "would lose the aggregate attributes")
+    return st
 
-    ops: list = [ScanOp(a.alias, a.rel, query.selections.get(a.alias),
-                        spec=query.selection_specs.get(a.alias))
-                 for a in query.atoms]
+
+def _pass_reroot_guard(st: PlanBuild) -> PlanBuild:
+    # classify() already roots the tree at its preferred guard (it tries
+    # each guard candidate for whole-tree FK/PK safety); this pass is the
+    # explicit seam where an alternative rooting policy would plug in.
+    if st.guard is not None and st.tree.root != st.guard:
+        st.tree = st.tree.rerooted(st.guard)
+    return st
+
+
+def _pass_lower(st: PlanBuild) -> PlanBuild:
+    """Emit the op graph: scans, the mode-generic join sweep, final agg."""
+    query, tree, mode = st.query, st.tree, st.mode
+    cur: dict[str, PlanNode] = {}
+    for a in query.atoms:
+        op = ScanOp(a.alias, a.rel, None, spec=None)
+        cur[a.alias] = make_scan_node(op, a)
 
     if mode == "ref":
         # left-deep materialising joins in join-tree connectivity order so
@@ -82,33 +134,115 @@ def plan_query(query: AggQuery, schema: Schema, mode: str = "auto",
         for nxt in order[1:]:
             par = tree.parent[nxt]
             on = tree.shared_vars(par, nxt) if par is not None else ()
-            ops.append(MaterializeJoinOp(base, nxt, on, regroup=False))
-        ops.append(FinalAggOp(base, query.group_by, query.aggregates,
-                              dedup=False))
-        return PhysicalPlan("ref", tuple(ops), tree, var_cols)
+            op = MaterializeJoinOp(base, nxt, on, regroup=False)
+            cur[base] = make_materialize_node(op, cur[base], cur[nxt])
+        agg = FinalAggOp(base, query.group_by, query.aggregates,
+                         dedup=False)
+        st.root = make_final_agg_node(agg, cur[base], tree.atoms.get(base))
+        return st
 
     # bottom-up sweep over join-tree edges (children before parents)
     for parent, child in tree.edges_bottom_up():
         on = tree.shared_vars(parent, child)
         if mode == "oma":
-            ops.append(SemiJoinOp(parent, child, on))
-            continue
-        fkpk = use_fkpk and edge_is_fk_pk(tree, schema, parent, child) \
-            and subtree_all_fk_pk(tree, schema, child)
-        if fkpk:
-            # child freq ≡ 1 and ≤1 partner: FreqJoin degenerates to a
-            # semi-join (§4.3) — skip the grouping machinery entirely.
-            ops.append(SemiJoinOp(parent, child, on))
+            op = SemiJoinOp(parent, child, on)
+            cur[parent] = make_join_node(op, cur[parent], cur[child],
+                                         st.var_cols)
         elif mode == "opt":
-            ops.append(MaterializeJoinOp(parent, child, on, regroup=True))
+            op = MaterializeJoinOp(parent, child, on, regroup=True)
+            cur[parent] = make_materialize_node(op, cur[parent], cur[child])
         else:  # opt_plus
-            pregroup = not (use_fkpk and _key_unique_in(
-                schema, tree.atoms[child], on, var_cols))
-            ops.append(FreqJoinOp(parent, child, on, pregroup=pregroup))
+            op = FreqJoinOp(parent, child, on, pregroup=True)
+            cur[parent] = make_join_node(op, cur[parent], cur[child],
+                                         st.var_cols)
 
-    ops.append(FinalAggOp(tree.root, query.group_by, query.aggregates,
-                          dedup=(mode == "oma")))
-    return PhysicalPlan(mode, tuple(ops), tree, var_cols)
+    agg = FinalAggOp(tree.root, query.group_by, query.aggregates,
+                     dedup=(mode == "oma"))
+    st.root = make_final_agg_node(agg, cur[tree.root],
+                                  tree.atoms.get(tree.root))
+    return st
 
 
-__all__ = ["plan_query", "classify", "build_join_tree"]
+def _pass_fkpk_degrade(st: PlanBuild) -> PlanBuild:
+    """§4.3 as an IR rewrite over the lowered graph."""
+    if not st.use_fkpk or st.mode not in ("opt", "opt_plus"):
+        return st
+    tree, schema, var_cols = st.tree, st.schema, st.var_cols
+
+    def rw(node: PlanNode, ins: tuple[PlanNode, ...]) -> PlanNode:
+        op = node.op
+        if isinstance(op, (FreqJoinOp, MaterializeJoinOp)) \
+                and tree.parent.get(op.child) == op.parent:
+            fkpk = edge_is_fk_pk(tree, schema, op.parent, op.child) \
+                and subtree_all_fk_pk(tree, schema, op.child)
+            if fkpk:
+                # child freq ≡ 1 and ≤1 partner: the join degenerates to a
+                # semi-join (§4.3) — skip the grouping machinery entirely.
+                semi = SemiJoinOp(op.parent, op.child, op.on_vars)
+                return make_join_node(semi, ins[0], ins[1], var_cols)
+            if isinstance(op, FreqJoinOp):
+                pregroup = not _key_unique_in(
+                    schema, tree.atoms[op.child], op.on_vars, var_cols)
+                if pregroup != op.pregroup:
+                    rep = dataclasses.replace(op, pregroup=pregroup)
+                    return make_join_node(rep, ins[0], ins[1], var_cols)
+        return _rebuild(node, ins, st)
+
+    st.root = rewrite_dag(st.root, rw)
+    return st
+
+
+def _pass_attach_selections(st: PlanBuild) -> PlanBuild:
+    """Attach the query's per-alias selections to the scan nodes."""
+    query = st.query
+    if not query.selections:
+        return st
+
+    def rw(node: PlanNode, ins: tuple[PlanNode, ...]) -> PlanNode:
+        op = node.op
+        if isinstance(op, ScanOp) and op.alias in query.selections:
+            rep = dataclasses.replace(
+                op, selection=query.selections[op.alias],
+                spec=query.selection_specs.get(op.alias))
+            return make_scan_node(rep, query.atom(op.alias))
+        return _rebuild(node, ins, st)
+
+    st.root = rewrite_dag(st.root, rw)
+    return st
+
+
+def _rebuild(node: PlanNode, ins: tuple[PlanNode, ...],
+             st: PlanBuild) -> PlanNode:
+    """Re-create `node` over rewritten inputs (identity when unchanged)."""
+    if ins == node.inputs:
+        return node
+    op = node.op
+    if isinstance(op, (SemiJoinOp, FreqJoinOp)):
+        return make_join_node(op, ins[0], ins[1], st.var_cols)
+    if isinstance(op, MaterializeJoinOp):
+        return make_materialize_node(op, ins[0], ins[1])
+    if isinstance(op, FinalAggOp):
+        return make_final_agg_node(op, ins[0],
+                                   st.tree.atoms.get(op.root))
+    return PlanNode(op, ins, node.struct)  # pragma: no cover
+
+
+PASSES = (
+    _pass_classify,
+    _pass_reroot_guard,
+    _pass_lower,
+    _pass_fkpk_degrade,
+    _pass_attach_selections,
+)
+
+
+def plan_query(query: AggQuery, schema: Schema, mode: str = "auto",
+               use_fkpk: bool = False) -> PhysicalPlan:
+    st = PlanBuild(query, schema, mode, use_fkpk)
+    for p in PASSES:
+        st = p(st)
+    return PhysicalPlan(st.mode, st.root, st.tree, st.var_cols)
+
+
+__all__ = ["plan_query", "classify", "build_join_tree", "PASSES",
+           "PlanBuild"]

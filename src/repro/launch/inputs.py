@@ -10,7 +10,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import ShapeCell
-from repro.distributed.sharding import logical_spec, use_mesh
+from repro.distributed.sharding import use_mesh
 from repro.models import decode_state_specs, init_decode_state, init_params
 from repro.models.config import ModelConfig
 

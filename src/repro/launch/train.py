@@ -24,7 +24,6 @@ import os
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.checkpoint import Checkpointer
 from repro.configs import ARCHS, get_config, get_smoke_config

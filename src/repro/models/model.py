@@ -20,7 +20,6 @@ same scan. `prefill` returns the populated caches for every family.
 
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

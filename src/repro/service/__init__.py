@@ -7,7 +7,12 @@ cache (``plan_cache``), and the concurrent micro-batching engine
 (``engine``).
 """
 
-from repro.service.engine import QueryResult, QueryService, ServeStats
+from repro.service.engine import (
+    AdmissionError,
+    QueryResult,
+    QueryService,
+    ServeStats,
+)
 from repro.service.fingerprint import (
     CanonicalQuery,
     canonicalize,
@@ -17,6 +22,7 @@ from repro.service.fingerprint import (
 from repro.service.plan_cache import LRUCache, PlanCache
 
 __all__ = [
+    "AdmissionError",
     "CanonicalQuery",
     "canonicalize",
     "fingerprint",

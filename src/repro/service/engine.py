@@ -13,9 +13,11 @@ run) into a serving engine:
 
 Request path:
 
-  1. parse SQL → AggQuery (skipped for AggQuery submissions);
+  1. parse SQL → AggQuery (skipped for AggQuery submissions); admission
+     fails fast — with the relation named — if a query touches a schema
+     relation with no loaded table;
   2. canonicalise → fingerprint (alias/variable-name invariant);
-  3. plan cache L1: fingerprint → PhysicalPlan;
+  3. plan cache L1: fingerprint → PhysicalPlan (an op-graph DAG);
   4. shape bucket: power-of-two-padded capacities of the scanned
      relations; tables are padded (``Table.pad_to``) to their bucket, so
      data growth inside a bucket re-uses compiled programs;
@@ -24,29 +26,33 @@ Request path:
 
 Micro-batching: ``submit_many`` groups requests sharing a fingerprint and
 runs each group's executable once, fanning the answer out per request
-(each with its own name mapping) — under a read-heavy dashboard workload
-identical queries are the common case, and the marginal cost of the
-duplicates drops to a dict rename.  Plans that fall outside the jittable
-fragment (unguarded/cyclic → ref) are still served, eagerly, with the
-paper's ExecStats attached.
+(each with its own name mapping).
 
-Cross-fingerprint fusion: *different* fingerprints whose plans share a
-scan/semi-join prefix (``segment_plan``: same relations, selections, join
-shape, and guard rooting) are compiled into ONE multi-query XLA program
-(``Executor.compile_multi``) that runs the shared prefix once and fans the
-root frequency vector out to each member's aggregate suffix.  A dashboard
-firing N distinct aggregates over the same dimension joins costs one
-compile and one prefix execution instead of N.  Fused executables live in
-a prefix-keyed cache level; ``metrics()`` exposes ``fused_*`` counters.
+Cross-fingerprint fusion: *different* fingerprints whose plan DAGs share
+at least one non-trivial subplan (``PhysicalPlan.subplan_keys``: a join
+node or a filtered scan with an equal content key) are grouped — union-find
+over shared keys, so overlap is transitive — and compiled into ONE
+multi-query XLA program (``Executor.compile_multi``) whose trace memo runs
+every shared sub-DAG once.  Unlike PR 2's whole-prefix equality, this
+fuses across *different join shapes*: a 3-way and a 5-way dashboard query
+sharing only their filtered dimension scans and first semi-joins still
+compile together.  Fused executables are cached by the merged-graph
+signature (sorted member graph keys) + shape bucket; ``metrics()`` exposes
+``fused_*`` plus ``partial_fusions`` (fused runs whose members do NOT all
+share one whole prefix — fusions the prefix rule would have missed) and
+``subplan_saved`` (subplan executions avoided by the shared trace memo).
 
-Thread safety: submissions serialise on an internal lock (Python-side
-bookkeeping is cheap; the work lives in XLA dispatch), so concurrent
-callers can share one service.
+Thread safety: the internal lock guards only cache and database mutation —
+XLA compiles and query execution run outside it, coordinated by per-key
+in-flight events so concurrent cold requests for the same executable
+compile it once.  ``metrics()`` and ``update_table`` never wait behind a
+long compile or an eager baseline run.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import threading
 import time
 from typing import Any, Callable
@@ -54,13 +60,22 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
-from repro.core.executor import ExecStats, Executor
+from repro.core.executor import (
+    ExecStats,
+    Executor,
+    shared_subplan_savings,
+)
 from repro.core.plan import MaterializeJoinOp, PhysicalPlan, segment_plan
 from repro.core.rewrite import plan_query
 from repro.core.sql import parse_sql
 from repro.service.fingerprint import CanonicalQuery, canonicalize
-from repro.service.plan_cache import PlanCache, ShapeBucket
+from repro.service.plan_cache import LRUCache, PlanCache, ShapeBucket
 from repro.tables.table import Schema, Table, bucket_capacity
+
+
+class AdmissionError(ValueError):
+    """A request referenced a relation the service cannot serve (present
+    in the schema but with no table loaded, or unknown entirely)."""
 
 
 @dataclasses.dataclass
@@ -98,14 +113,17 @@ class _Request:
 @dataclasses.dataclass
 class _Unit:
     """One fingerprint's worth of a batch: the requests sharing it, their
-    cached plan, and (once served) the canonical result dict."""
+    cached plan, the plan's fusion identity, and (once served) the
+    canonical result dict."""
 
     group: list[_Request]
     plan: PhysicalPlan
     plan_hit: bool
     plan_s: float
     eager: bool                       # materialising plan → eager fallback
-    prefix_key: str | None            # shareable-prefix identity (jittable)
+    prefix_key: str | None            # whole-prefix identity (diagnostics)
+    subplans: frozenset               # non-trivial subplan content keys
+    sig: str                          # member signature for the fused cache
     results: dict = dataclasses.field(default_factory=dict)
 
     @property
@@ -129,11 +147,15 @@ class QueryService:
         self._jit_executor = Executor(self._db, schema, freq_dtype, backend,
                                       interpret, dense_domain=dense_domain)
         self._padded: dict[str, Table] = {}
-        # fingerprint → (eager, prefix_key): segmentation is a pure function
-        # of the canonical structure, so memoise it across batches (bounded:
-        # cleared when it outgrows the plan cache several times over)
-        self._segments: dict[str, tuple[bool, str | None]] = {}
+        # fingerprint → (eager, prefix_key, subplans, sig): the fusion
+        # identity is a pure function of the canonical structure, so
+        # memoise it across batches (bounded: cleared when it outgrows the
+        # plan cache several times over)
+        self._segments: dict[str, tuple] = {}
+        # guards cache + db mutation ONLY; compiles and execution run
+        # outside it, serialised per cache key by these in-flight events
         self._lock = threading.RLock()
+        self._inflight: dict[tuple, threading.Event] = {}
         self._counters = {
             "requests": 0, "batches": 0, "dedup_saved": 0,
             "compiles": 0, "eager_requests": 0,
@@ -142,7 +164,8 @@ class QueryService:
             "fused_batches": 0,       # fused program executions
             "fused_queries": 0,       # distinct fingerprints they answered
             "fused_compiles": 0,      # of "compiles", how many were fused
-            "fused_prefix_saved": 0,  # prefix executions avoided
+            "partial_fusions": 0,     # fused runs beyond whole-prefix rule
+            "subplan_saved": 0,       # subplan executions avoided
         }
         self._compile_s_total = 0.0
 
@@ -185,18 +208,25 @@ class QueryService:
                 n = self.cache.invalidate_relation(name)
                 self._counters["bucket_invalidations"] += n
 
-    def _padded_view(self, rel: str) -> Table:
-        tab = self._padded.get(rel)
-        if tab is None:
-            raw = self._db[rel]
-            tab = raw.pad_to(bucket_capacity(raw.capacity, self.min_bucket))
-            self._padded[rel] = tab
-        return tab
-
-    def _bucket_for(self, plan: PhysicalPlan) -> ShapeBucket:
-        return tuple(
-            (rel, bucket_capacity(self._db[rel].capacity, self.min_bucket))
-            for rel in plan.scanned_rels())
+    def _snapshot(self, rels) -> tuple[ShapeBucket, dict[str, Table]]:
+        """Shape bucket + bucket-padded table views for `rels`, taken under
+        ONE lock acquisition so they describe the same database state: a
+        concurrent bucket-crossing ``update_table`` can never pair a
+        stale-bucket cache key with fresh-shaped inputs (which would make
+        the cached jitted fn silently retrace inside ``jax.jit``).  Tables
+        are immutable, so the snapshot stays consistent after release."""
+        with self._lock:
+            bucket: ShapeBucket = tuple(
+                (rel, bucket_capacity(self._db[rel].capacity,
+                                      self.min_bucket))
+                for rel in rels)
+            sub_db: dict[str, Table] = {}
+            for rel, cap in bucket:
+                tab = self._padded.get(rel)
+                if tab is None:
+                    self._padded[rel] = tab = self._db[rel].pad_to(cap)
+                sub_db[rel] = tab
+            return bucket, sub_db
 
     # ---- request plane ---------------------------------------------------
     def submit(self, query) -> QueryResult:
@@ -207,11 +237,11 @@ class QueryService:
         """Serve a batch of concurrent requests.
 
         Requests sharing a fingerprint are answered by one executable
-        invocation; fingerprints sharing a plan prefix (same scans,
-        selections, and join sweep — only the aggregates differ) are fused
-        into one multi-query program compiled and run once."""
+        invocation; fingerprints whose plan DAGs overlap on any non-trivial
+        subplan are fused into one multi-query program compiled and run
+        once, with every shared sub-DAG computed a single time."""
+        reqs = [self._admit(q) for q in queries]
         with self._lock:
-            reqs = [self._admit(q) for q in queries]
             groups: dict[str, list[_Request]] = {}
             for r in reqs:
                 groups.setdefault(r.canon.fingerprint, []).append(r)
@@ -219,35 +249,25 @@ class QueryService:
             self._counters["batches"] += 1
             for group in groups.values():
                 self._counters["dedup_saved"] += len(group) - 1
-
             units = [self._plan_unit(group) for group in groups.values()]
 
-            # partition: eager fallbacks run alone; jittable units group by
-            # (query-level prefix candidate, plan-level prefix identity)
-            fusable: dict[tuple[str, str], list[_Unit]] = {}
-            for u in units:
-                if u.eager:
-                    self._serve_eager(u)
-                elif u.prefix_key is None:
-                    self._serve_single(u)
-                else:
-                    key = (u.canon.prefix_fingerprint, u.prefix_key)
-                    fusable.setdefault(key, []).append(u)
-            for (_pfp, prefix_key), us in fusable.items():
-                if len(us) == 1:
-                    self._serve_single(us[0])
-                else:
-                    self._serve_fused(prefix_key, us)
+        eagers, singles, fused_groups = self._fusion_groups(units)
+        for u in eagers:
+            self._serve_eager(u)
+        for u in singles:
+            self._serve_single(u)
+        for us in fused_groups:
+            self._serve_fused(us)
 
-            results: dict[int, QueryResult] = {}
-            for u in units:
-                for i, r in enumerate(u.group):
-                    r.stats.shared_execution = i > 0
-                    r.stats.total_s = (r.stats.parse_s + r.stats.plan_s
-                                       + r.stats.compile_s + r.stats.run_s)
-                    results[id(r)] = QueryResult(
-                        r.canon.rename_results(u.results), r.stats)
-            return [results[id(r)] for r in reqs]
+        results: dict[int, QueryResult] = {}
+        for u in units:
+            for i, r in enumerate(u.group):
+                r.stats.shared_execution = i > 0
+                r.stats.total_s = (r.stats.parse_s + r.stats.plan_s
+                                   + r.stats.compile_s + r.stats.run_s)
+                results[id(r)] = QueryResult(
+                    r.canon.rename_results(u.results), r.stats)
+        return [results[id(r)] for r in reqs]
 
     def _admit(self, query) -> _Request:
         stats = ServeStats()
@@ -255,12 +275,23 @@ class QueryService:
             t0 = time.perf_counter()
             query = parse_sql(query, self.schema)
             stats.parse_s = time.perf_counter() - t0
+        for atom in query.atoms:
+            if atom.rel not in self.schema.relations:
+                raise AdmissionError(
+                    f"query references relation {atom.rel!r}, which is not "
+                    "in the schema")
+            if atom.rel not in self._db:
+                raise AdmissionError(
+                    f"query references relation {atom.rel!r}, which has no "
+                    f"table loaded; call update_table({atom.rel!r}, table) "
+                    "first")
         canon = canonicalize(query)
         stats.fingerprint = canon.fingerprint
         return _Request(canon, stats)
 
     def _plan_unit(self, group: list[_Request]) -> _Unit:
-        """L1 plan-cache lookup + segmentation for one fingerprint group."""
+        """L1 plan-cache lookup + fusion identity for one fingerprint
+        group.  Caller holds the lock."""
         canon = group[0].canon
         t0 = time.perf_counter()
         plan, plan_hit = self.cache.get_plan(
@@ -271,12 +302,86 @@ class QueryService:
         seg = self._segments.get(canon.fingerprint)
         if seg is None:
             eager = any(isinstance(op, MaterializeJoinOp) for op in plan.ops)
-            prefix_key = None if eager else segment_plan(plan).prefix_key
+            if eager:
+                seg = (True, None, frozenset(), canon.fingerprint)
+            else:
+                # opaque-selection plans key their scans on callable
+                # identity, which can be recycled after GC — their member
+                # signature falls back to the (salted, process-unique)
+                # fingerprint so a fused cache entry can never alias them
+                gk = plan.graph_key() if canon.shareable else None
+                seg = (False, segment_plan(plan).prefix_key,
+                       plan.subplan_keys(),
+                       gk if gk is not None else canon.fingerprint)
             if len(self._segments) > 4 * self.cache.plans.capacity:
                 self._segments.clear()
-            self._segments[canon.fingerprint] = seg = (eager, prefix_key)
-        eager, prefix_key = seg
-        return _Unit(group, plan, plan_hit, plan_s, eager, prefix_key)
+            self._segments[canon.fingerprint] = seg
+        eager, prefix_key, subplans, sig = seg
+        return _Unit(group, plan, plan_hit, plan_s, eager, prefix_key,
+                     subplans, sig)
+
+    def _fusion_groups(self, units: list[_Unit]):
+        """Partition a batch: eager fallbacks, lone jittable units, and
+        fusion groups — connected components of the "shares a non-trivial
+        subplan key" relation (union-find over key owners)."""
+        eagers = [u for u in units if u.eager]
+        jit_units = [u for u in units if not u.eager]
+        singles = [u for u in jit_units if not u.subplans]
+        fusable = [u for u in jit_units if u.subplans]
+
+        parent = list(range(len(fusable)))
+
+        def find(i: int) -> int:
+            while parent[i] != i:
+                parent[i] = parent[parent[i]]
+                i = parent[i]
+            return i
+
+        owner: dict = {}
+        for i, u in enumerate(fusable):
+            for k in u.subplans:
+                j = owner.setdefault(k, i)
+                if j != i:
+                    parent[find(i)] = find(j)
+        comps: dict[int, list[_Unit]] = {}
+        for i, u in enumerate(fusable):
+            comps.setdefault(find(i), []).append(u)
+        fused_groups = []
+        for comp in comps.values():
+            if len(comp) == 1:
+                singles.append(comp[0])
+            else:
+                fused_groups.append(comp)
+        return eagers, singles, fused_groups
+
+    # ---- execution -------------------------------------------------------
+    def _get_or_build(self, cache: LRUCache, key, build: Callable):
+        """Executable-cache access with the lock held only around the cache
+        itself: a miss releases the lock, compiles, and re-inserts, while
+        concurrent requests for the SAME key wait on an in-flight event
+        instead of compiling twice (and requests for other keys — or
+        ``metrics()``/``update_table`` — proceed untouched)."""
+        flight_key = (id(cache), key)
+        while True:
+            with self._lock:
+                if key in cache:
+                    return cache.get(key), True
+                ev = self._inflight.get(flight_key)
+                if ev is None:
+                    ev = threading.Event()
+                    self._inflight[flight_key] = ev
+                    break
+            ev.wait()
+        try:
+            value = build()
+            with self._lock:
+                cache.misses += 1
+                cache.put(key, value)
+            return value, False
+        finally:
+            with self._lock:
+                self._inflight.pop(flight_key, None)
+            ev.set()
 
     def _finish_unit(self, u: _Unit, results: dict, *, exec_hit: bool,
                      bucket: ShapeBucket, compile_s: float, run_s: float,
@@ -295,10 +400,9 @@ class QueryService:
 
     def _serve_single(self, u: _Unit) -> None:
         """The classic path: one fingerprint, one executable."""
-        bucket = self._bucket_for(u.plan)
-        fn, exec_hit, compile_s = self._executable(u.canon, u.plan, bucket)
-        sub_db = {rel: self._padded_view(rel)
-                  for rel in u.plan.scanned_rels()}
+        bucket, sub_db = self._snapshot(u.plan.scanned_rels())
+        fn, exec_hit, compile_s = self._executable(u.canon, u.plan, bucket,
+                                                   sub_db)
         t0 = time.perf_counter()
         results = fn(sub_db)
         jax.block_until_ready(results)
@@ -306,78 +410,89 @@ class QueryService:
         self._finish_unit(u, results, exec_hit=exec_hit, bucket=bucket,
                           compile_s=compile_s, run_s=run_s)
 
-    def _serve_fused(self, prefix_key: str, units: list[_Unit]) -> None:
-        """Compile and run several prefix-sharing fingerprints as ONE
-        program: the shared scan/semi-join prefix executes once, each
-        member's aggregate suffix folds the same root frequency vector."""
+    def _serve_fused(self, units: list[_Unit]) -> None:
+        """Compile and run several subplan-sharing fingerprints as ONE
+        program: each shared sub-DAG executes once, every member's
+        remaining ops fold the shared vectors into its own answer."""
         units.sort(key=lambda u: u.canon.fingerprint)
-        members = tuple(u.canon.fingerprint for u in units)
         plans = [u.plan for u in units]
         rels = sorted({rel for p in plans for rel in p.scanned_rels()})
-        bucket: ShapeBucket = tuple(
-            (rel, bucket_capacity(self._db[rel].capacity, self.min_bucket))
-            for rel in rels)
+        bucket, sub_db = self._snapshot(rels)
+        signature = hashlib.sha256(
+            repr(tuple(u.sig for u in units)).encode()).hexdigest()
         compile_s = 0.0
 
         def build():
             nonlocal compile_s
             t0 = time.perf_counter()
             fn = self._jit_executor.compile_multi(plans)
-            sub = {rel: self._padded_view(rel) for rel in rels}
-            jax.block_until_ready(fn(sub))
+            jax.block_until_ready(fn(sub_db))
             compile_s = time.perf_counter() - t0
-            self._counters["compiles"] += 1
-            self._counters["fused_compiles"] += 1
-            self._compile_s_total += compile_s
+            with self._lock:
+                self._counters["compiles"] += 1
+                self._counters["fused_compiles"] += 1
+                self._compile_s_total += compile_s
             return fn
 
-        fn, exec_hit = self.cache.get_fused(prefix_key, members, bucket,
-                                            build)
-        sub_db = {rel: self._padded_view(rel) for rel in rels}
+        fn, exec_hit = self._get_or_build(
+            self.cache.fused, PlanCache.fused_key(signature, bucket), build)
         t0 = time.perf_counter()
         outs = fn(sub_db)
         jax.block_until_ready(outs)
         run_s = time.perf_counter() - t0
 
-        self._counters["fused_batches"] += 1
-        self._counters["fused_queries"] += len(units)
-        self._counters["fused_prefix_saved"] += len(units) - 1
+        with self._lock:
+            self._counters["fused_batches"] += 1
+            self._counters["fused_queries"] += len(units)
+            self._counters["subplan_saved"] += shared_subplan_savings(plans)
+            if len({u.prefix_key for u in units}) > 1:
+                # members do NOT all share one whole prefix: this fusion is
+                # beyond PR 2's equal-prefix rule (different join shapes)
+                self._counters["partial_fusions"] += 1
         for u, results in zip(units, outs):
             self._finish_unit(u, results, exec_hit=exec_hit, bucket=bucket,
                               compile_s=compile_s, run_s=run_s,
                               fused_size=len(units))
 
     def _executable(self, canon: CanonicalQuery, plan: PhysicalPlan,
-                    bucket: ShapeBucket) -> tuple[Callable, bool, float]:
+                    bucket: ShapeBucket, sub_db: dict[str, Table],
+                    ) -> tuple[Callable, bool, float]:
         compile_s = 0.0
 
         def build():
             nonlocal compile_s
             t0 = time.perf_counter()
             fn = self._jit_executor.compile(plan)
-            # trace + compile now, against the bucket shapes, so the cache
-            # entry is a ready-to-run program and `run_s` is pure execution
-            sub_db = {rel: self._padded_view(rel)
-                      for rel in plan.scanned_rels()}
+            # trace + compile now, against the snapshot's bucket shapes, so
+            # the cache entry is a ready-to-run program and `run_s` is pure
+            # execution
             jax.block_until_ready(fn(sub_db))
             compile_s = time.perf_counter() - t0
-            self._counters["compiles"] += 1
-            self._compile_s_total += compile_s
+            with self._lock:
+                self._counters["compiles"] += 1
+                self._compile_s_total += compile_s
             return fn
 
-        fn, hit = self.cache.get_executable(canon.fingerprint, bucket, build)
+        fn, hit = self._get_or_build(
+            self.cache.execs,
+            PlanCache.exec_key(canon.fingerprint, bucket), build)
         return fn, hit, compile_s
 
     def _serve_eager(self, u: _Unit) -> None:
         """Fallback for non-jittable (materialising) plans: serve eagerly
         with the paper's per-step ExecStats attached."""
-        self._counters["eager_requests"] += len(u.group)
-        # the jit executor shares self._db (update_table mutates in place)
-        # and was never configured with eager-only options, so it serves
-        # the eager surface too
+        base = self._jit_executor
+        with self._lock:
+            self._counters["eager_requests"] += len(u.group)
+            # snapshot the scanned tables under the lock (tables are
+            # immutable): execution then runs unlocked over a consistent
+            # database state even if update_table swaps relations mid-run
+            sub_db = {rel: self._db[rel] for rel in u.plan.scanned_rels()}
+        ex = Executor(sub_db, self.schema, base.freq_dtype, base.backend,
+                      base.interpret, dense_domain=base.dense_domain)
         stats = ExecStats()
         t0 = time.perf_counter()
-        results = self._jit_executor.execute(u.plan, stats)
+        results = ex.execute(u.plan, stats)
         # the executor's "__stats__" sentinel is bookkeeping, not an answer
         # column: it travels via ServeStats.exec_stats only
         results.pop("__stats__", None)

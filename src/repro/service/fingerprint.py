@@ -31,10 +31,11 @@ Besides the full fingerprint, canonicalisation exposes a **prefix
 fingerprint**: the identity of the scan/join structure alone, computed
 with aggregate/GROUP BY roles excluded from the colouring.  Two queries
 with different fingerprints but equal prefix fingerprints read the same
-relations through the same join shape with the same selections — the
-candidate condition for fusing them into one XLA program (the serving
-tier's cross-fingerprint batching; the exact per-plan test lives in
-``repro.core.plan.segment_plan``).
+relations through the same join shape with the same selections.  (Since
+the op-graph IR, fusion *grouping* is plan-level — subplan-key overlap on
+the plan DAG, which also admits partially overlapping join shapes; the
+prefix fingerprint remains the query-level whole-prefix identity, used for
+diagnostics such as the ``partial_fusions`` counter.)
 """
 
 from __future__ import annotations

@@ -9,9 +9,11 @@ per (structure, shape bucket).  Buckets are tuples of
 capacities rounded up to powers of two (``bucket_capacity``) — so tables
 growing inside their bucket re-use the compiled program bit-for-bit.
 Level 3 caches *fused* executables — one XLA program answering several
-distinct fingerprints that share a scan/semi-join prefix — keyed by
-(prefix key, sorted member fingerprints, bucket), so a repeating dashboard
-workload recompiles nothing.
+distinct fingerprints whose plan DAGs overlap on shared subplans — keyed
+by (merged-graph signature, bucket), so a repeating dashboard workload
+recompiles nothing.  The signature hashes the sorted member graph keys
+(``PhysicalPlan.graph_key``), so any request order for the same query set
+hits the same compiled program.
 
 All levels are bounded LRU with hit/miss/eviction counters; ``metrics()``
 flattens them into the dict the serving engine exposes.
@@ -91,10 +93,10 @@ class PlanCache:
 
     * ``plans`` — fingerprint → PhysicalPlan;
     * ``execs`` — (fingerprint, ShapeBucket) → single-query executable;
-    * ``fused`` — (prefix_key, member fingerprints, ShapeBucket) → fused
-      multi-query executable.  ``prefix_key`` is the shared-prefix identity
-      from ``segment_plan``; the member tuple is sorted so any request
-      order for the same query set hits the same compiled program.
+    * ``fused`` — (merged-graph signature, ShapeBucket) → fused
+      multi-query executable.  The signature content-addresses the whole
+      member set (sorted graph keys), so it is order-invariant and safe
+      across structurally-identical query sets.
     """
 
     def __init__(self, plan_capacity: int = 256, exec_capacity: int = 512,
@@ -103,27 +105,31 @@ class PlanCache:
         self.execs = LRUCache(exec_capacity)
         self.fused = LRUCache(fused_capacity)
 
+    # single source of the executable-cache key shapes: the serving engine
+    # (which accesses the LRUs directly to keep compiles outside its lock)
+    # and the get_* conveniences below both build keys here, and
+    # ``invalidate_relation`` relies on the bucket sitting last
+    @staticmethod
+    def exec_key(fingerprint: str, bucket: ShapeBucket) -> tuple:
+        return (fingerprint, bucket)
+
+    @staticmethod
+    def fused_key(signature: str, bucket: ShapeBucket) -> tuple:
+        return (signature, bucket)
+
     def get_plan(self, fingerprint: str,
                  factory: Callable[[], PhysicalPlan]) -> tuple[PhysicalPlan, bool]:
         return self.plans.get_or_create(fingerprint, factory)
 
     def get_executable(self, fingerprint: str, bucket: ShapeBucket,
                        factory: Callable[[], Callable]) -> tuple[Callable, bool]:
-        return self.execs.get_or_create((fingerprint, bucket), factory)
-
-    def get_fused(self, prefix_key: str, members: tuple[str, ...],
-                  bucket: ShapeBucket,
-                  factory: Callable[[], Callable]) -> tuple[Callable, bool]:
-        """Fused executable for a sorted tuple of member fingerprints that
-        share the plan prefix `prefix_key` at shapes `bucket`."""
-        return self.fused.get_or_create((prefix_key, members, bucket),
+        return self.execs.get_or_create(self.exec_key(fingerprint, bucket),
                                         factory)
 
     def invalidate_relation(self, rel: str) -> int:
         """Drop executables whose bucket pins `rel` to a now-stale capacity.
         Called when a table's data outgrows its bucket; plans (shape-free)
-        survive.  Fused programs key their bucket last, single-query
-        programs second."""
+        survive.  Both key builders above place the bucket last."""
         def stale(key) -> bool:
             bucket = key[-1]
             return any(r == rel for r, _ in bucket)

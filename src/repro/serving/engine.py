@@ -19,7 +19,6 @@ import numpy as np
 
 from repro.models import (
     decode_step,
-    forward,
     init_decode_state,
     prefill,
 )

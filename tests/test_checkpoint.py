@@ -4,7 +4,6 @@ elastic restore re-places onto different shardings."""
 import dataclasses
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.checkpoint import Checkpointer

@@ -5,7 +5,6 @@ materialisation accounting (the Fig. 6 invariant)."""
 import itertools
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

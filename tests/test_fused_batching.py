@@ -5,7 +5,13 @@ import jax
 import numpy as np
 import pytest
 
-from repro.core import Executor, parse_sql, plan_query, segment_plan
+from repro.core import (
+    Executor,
+    parse_sql,
+    plan_query,
+    segment_plan,
+    shared_subplan_savings,
+)
 from repro.core.plan import FinalAggOp, MaterializeJoinOp, op_result_keys
 from repro.core.query import Agg, AggQuery, Atom
 from repro.data import make_stats_db, make_tpch_db
@@ -179,15 +185,19 @@ def test_service_fuses_prefix_sharing_fingerprints(tpch):
     batch = DASHBOARD + [FIG1]
     results = svc.submit_many(batch)
     m = svc.metrics()
-    # one fused program for the dashboard trio + one single for FIG1
-    assert m["compiles"] == 2
+    # ONE fused program: the dashboard trio shares its whole prefix, and
+    # FIG1 — a different join shape — overlaps it on the filtered region
+    # scan and the nation/supplier semi-join chain, so subplan-overlap
+    # grouping pulls all four together (PR 2's whole-prefix rule kept FIG1
+    # out; that difference is what partial_fusions counts)
+    assert m["compiles"] == 1
     assert m["fused_compiles"] == 1
     assert m["fused_batches"] == 1
-    assert m["fused_queries"] == 3
-    assert m["fused_prefix_saved"] == 2
-    for r in results[:3]:
-        assert r.stats.fused and r.stats.fused_group_size == 3
-    assert not results[3].stats.fused
+    assert m["fused_queries"] == 4
+    assert m["partial_fusions"] == 1
+    assert m["subplan_saved"] > 0
+    for r in results:
+        assert r.stats.fused and r.stats.fused_group_size == 4
 
     # answers match individual serving bitwise
     solo_svc = QueryService(db, schema)
@@ -197,7 +207,7 @@ def test_service_fuses_prefix_sharing_fingerprints(tpch):
     # a repeat dashboard hits the fused executable cache: zero compiles
     again = svc.submit_many(batch)
     m2 = svc.metrics()
-    assert m2["compiles"] == 2
+    assert m2["compiles"] == 1
     assert m2["fused_hits"] >= 1
     assert again[0].stats.exec_cache_hit
     for r, sql in zip(again, batch):
@@ -258,6 +268,145 @@ def test_service_fused_invalidation_on_bucket_crossing(tpch):
     solo = QueryService({**db, "supplier": Table.from_numpy(grown)}, schema)
     for r, sql in zip(results, DASHBOARD):
         _assert_values_equal(r.values, solo.submit(sql).values)
+
+
+# ---------------------------------------------------------------------------
+# partial fusion across different join shapes (op-graph IR)
+# ---------------------------------------------------------------------------
+# 3-way, 4-way, and 5-way joins: every whole-plan prefix is distinct (PR 2's
+# equal-prefix rule fuses NOTHING here), but all three overlap on the
+# filtered region scan + nation semi-join sub-DAG.
+MIX_3WAY = f"SELECT MIN(s.s_acctbal) {_SUPP_DIMS}"
+MIX_4WAY = f"""SELECT MIN(s.s_acctbal), MAX(s.s_acctbal)
+FROM supplier s, nation n, region r, partsupp ps
+WHERE s.s_nationkey = n.n_nationkey AND n.n_regionkey = r.r_regionkey
+  AND s.s_suppkey = ps.ps_suppkey AND r.r_name IN (2, 3)"""
+MIX_5WAY = FIG1
+MIXED_SHAPES = [MIX_3WAY, MIX_4WAY, MIX_5WAY]
+
+
+def test_subplan_keys_overlap_across_join_shapes(tpch):
+    _, schema = tpch
+    plans = [plan_query(canonicalize(parse_sql(sql, schema)).query, schema)
+             for sql in MIXED_SHAPES]
+    prefixes = {segment_plan(p).prefix_key for p in plans}
+    assert len(prefixes) == 3            # whole-prefix fusion finds nothing
+    for a in plans:
+        for b in plans:
+            if a is not b:
+                assert a.subplan_keys() & b.subplan_keys()
+    savings = shared_subplan_savings(plans)
+    assert savings > 0
+
+
+def test_compile_multi_dedups_partial_overlap(tpch):
+    """Fused compilation of different join shapes matches per-plan
+    compilation bitwise."""
+    db, schema = tpch
+    plans = [plan_query(parse_sql(sql, schema), schema)
+             for sql in MIXED_SHAPES]
+    ex = Executor(db, schema)
+    fused = ex.compile_multi(plans)(db)
+    for plan, got in zip(plans, fused):
+        want = ex.compile(plan)(db)
+        _assert_values_equal(dict(want), dict(got))
+
+
+def test_service_partial_fusion_across_shapes(tpch):
+    db, schema = tpch
+    svc = QueryService(db, schema)
+    results = svc.submit_many(MIXED_SHAPES)
+    m = svc.metrics()
+    assert m["compiles"] == 1            # one program for all three shapes
+    assert m["fused_queries"] == 3
+    assert m["partial_fusions"] == 1
+    assert m["subplan_saved"] > 0
+    solo = QueryService(db, schema)
+    for r, sql in zip(results, MIXED_SHAPES):
+        assert r.stats.fused and r.stats.fused_group_size == 3
+        _assert_values_equal(r.values, solo.submit(sql).values)
+    assert solo.metrics()["compiles"] == 3   # served alone: one compile each
+
+
+def test_service_no_fusion_without_shared_subplans(tpch):
+    """Queries overlapping only on bare (selection-free) scans stay
+    unfused: sharing a table read saves nothing."""
+    db, schema = tpch
+    svc = QueryService(db, schema)
+    svc.submit_many([
+        "SELECT MIN(s.s_acctbal) FROM supplier s",
+        "SELECT MAX(p.p_price) FROM part p",
+    ])
+    m = svc.metrics()
+    assert m["compiles"] == 2
+    assert m["fused_batches"] == 0
+    assert m["partial_fusions"] == 0
+
+
+def test_describe_renders_dag_with_node_keys(tpch):
+    _, schema = tpch
+    plans = [plan_query(canonicalize(parse_sql(sql, schema)).query, schema)
+             for sql in (MIX_3WAY, MIX_5WAY)]
+    texts = [p.describe() for p in plans]
+    for p, t in zip(plans, texts):
+        assert f"plan[{p.mode}]" in t
+        assert "%0" in t and "key=" in t
+    # fusion decisions are inspectable: the shared semi-join sub-DAG
+    # prints the same short key in both plans
+    shared = plans[0].subplan_keys() & plans[1].subplan_keys()
+    assert shared
+    from repro.core.plan import _short_key  # rendering helper
+    for node in plans[0].nodes:
+        if node.key() in shared:
+            assert f"key={_short_key(node)}" in texts[0]
+            assert f"key={_short_key(node)}" in texts[1]
+
+
+def test_graph_key_distinguishes_aggregate_columns(tpch):
+    """Regression: canonical variable names are role-coloured labels, so a
+    graph key that recorded only names (not root-atom column positions)
+    collided SUM(s_suppkey) with SUM(s_nationkey) — and the fused cache,
+    keyed on the merged-graph signature, then served one query's compiled
+    program as the other's answer."""
+    db, schema = tpch
+    QA = ("SELECT SUM(s.s_suppkey) FROM supplier s, nation n "
+          "WHERE s.s_nationkey = n.n_nationkey")
+    QB = QA.replace("SUM(s.s_suppkey)", "SUM(s.s_nationkey)")
+    pa = plan_query(canonicalize(parse_sql(QA, schema)).query, schema)
+    pb = plan_query(canonicalize(parse_sql(QB, schema)).query, schema)
+    assert pa.graph_key() != pb.graph_key()
+    ga = QA + " GROUP BY s.s_suppkey"
+    gb = QA + " GROUP BY s.s_nationkey"
+    assert (plan_query(canonicalize(parse_sql(ga, schema)).query,
+                       schema).graph_key()
+            != plan_query(canonicalize(parse_sql(gb, schema)).query,
+                          schema).graph_key())
+
+    # the end-to-end aliasing: X shares the semi-join with both, so
+    # {QA, X} and {QB, X} each fuse; their signatures must differ and the
+    # second batch must NOT be answered from the first batch's program
+    X = ("SELECT MIN(s.s_acctbal) FROM supplier s, nation n "
+         "WHERE s.s_nationkey = n.n_nationkey")
+    svc = QueryService(db, schema)
+    ra = svc.submit_many([QA, X])[0]
+    rb = svc.submit_many([QB, X])[0]
+    solo = QueryService(db, schema)
+    for r, sql in ((ra, QA), (rb, QB)):
+        _assert_values_equal(r.values, solo.submit(sql).values)
+    assert (float(ra.values["sum(s.s_suppkey)"])
+            != float(rb.values["sum(s.s_nationkey)"]))
+
+
+def test_admission_error_names_missing_relation(tpch):
+    db, schema = tpch
+    partial_db = {k: v for k, v in db.items() if k != "part"}
+    svc = QueryService(partial_db, schema)
+    with pytest.raises(ValueError, match="'part'.*no table loaded"):
+        svc.submit(FIG1)
+    with pytest.raises(ValueError, match="update_table"):
+        svc.submit_many([DASH_SUM, FIG1])
+    # queries over loaded relations still serve
+    assert svc.submit(DASH_SUM).values
 
 
 def test_service_eager_values_carry_no_stats_sentinel():

@@ -1,0 +1,135 @@
+"""Op-graph IR unit tests: node content keys, DAG utilities, the pass
+pipeline, and the linear ``ops`` compatibility view."""
+
+import jax
+import pytest
+
+from repro.core import PlanNode, parse_sql, plan_query, rewrite_dag
+from repro.core.plan import (
+    FinalAggOp,
+    FreqJoinOp,
+    MaterializeJoinOp,
+    ScanOp,
+    SemiJoinOp,
+)
+from repro.core.query import Agg, AggQuery, Atom
+from repro.core.rewrite import PASSES
+from repro.data import make_tpch_db
+
+jax.config.update("jax_platform_name", "cpu")
+
+SUM3 = """SELECT SUM(s.s_acctbal) FROM supplier s, nation n, region r
+WHERE s.s_nationkey = n.n_nationkey AND n.n_regionkey = r.r_regionkey
+  AND r.r_name IN (2, 3)"""
+
+
+@pytest.fixture(scope="module")
+def schema():
+    return make_tpch_db(scale=5)[1]
+
+
+def test_node_keys_hash_the_whole_sub_dag(schema):
+    a = plan_query(parse_sql(SUM3, schema), schema)
+    b = plan_query(parse_sql(SUM3.replace("(2, 3)", "(1, 4)"), schema),
+                   schema)
+    # the filtered scan differs → every node ABOVE it differs too, while
+    # the untouched sibling scans keep their keys
+    a_keys = {n.key() for n in a.nodes}
+    b_keys = {n.key() for n in b.nodes}
+    assert a_keys != b_keys
+    shared = a_keys & b_keys
+    assert any(isinstance(n.op, ScanOp) and n.key() in shared
+               for n in a.nodes)           # unfiltered scans unify
+    roots = [p.root.inputs[0] for p in (a, b)]
+    assert roots[0].key() != roots[1].key()  # chains diverge at the root
+
+
+def test_node_key_is_alias_and_variable_blind(schema):
+    renamed = """SELECT SUM(su.s_acctbal) FROM region re, supplier su,
+        nation na WHERE re.r_name IN (3, 2)
+        AND na.n_regionkey = re.r_regionkey
+        AND su.s_nationkey = na.n_nationkey"""
+    from repro.service import canonicalize
+    pa = plan_query(canonicalize(parse_sql(SUM3, schema)).query, schema)
+    pb = plan_query(canonicalize(parse_sql(renamed, schema)).query, schema)
+    assert pa.root.key() == pb.root.key()
+    assert pa.graph_key() == pb.graph_key()
+
+
+def test_ops_view_is_topological(schema):
+    for mode in ("ref", "opt", "opt_plus", "oma"):
+        try:
+            plan = plan_query(parse_sql(SUM3, schema), schema, mode=mode)
+        except ValueError:
+            continue
+        seen: set[int] = set()
+        for node in plan.nodes:
+            assert all(id(i) in seen for i in node.inputs)
+            seen.add(id(node))
+        assert isinstance(plan.nodes[-1].op, FinalAggOp)
+        assert plan.ops == tuple(n.op for n in plan.nodes)
+
+
+def test_rewrite_dag_preserves_sharing():
+    scan = PlanNode(ScanOp("a", "r", None), (), ("scan", "r", (0,), None))
+    join = PlanNode(SemiJoinOp("a", "a", ()), (scan, scan), (("semi",), (), ()))
+    out = rewrite_dag(join, lambda n, ins: PlanNode(n.op, ins, n.struct))
+    assert out.inputs[0] is out.inputs[1]   # shared input rewritten once
+
+
+def test_materialising_nodes_poison_keys(schema):
+    plan = plan_query(parse_sql(SUM3, schema), schema, mode="ref")
+    assert plan.graph_key() is None
+    mat = [n for n in plan.nodes if isinstance(n.op, MaterializeJoinOp)]
+    assert mat and all(n.key() is None for n in mat)
+    # scans below the materialise stay shareable
+    assert all(n.key() is not None for n in plan.nodes
+               if isinstance(n.op, ScanOp))
+    assert plan.subplan_keys() == frozenset()
+
+
+def test_subplan_keys_skip_trivial_scans(schema):
+    plan = plan_query(parse_sql(SUM3, schema), schema)
+    keys = plan.subplan_keys()
+    joins = [n for n in plan.nodes
+             if isinstance(n.op, (SemiJoinOp, FreqJoinOp))]
+    sel_scans = [n for n in plan.nodes
+                 if isinstance(n.op, ScanOp) and n.op.spec is not None]
+    bare_scans = [n for n in plan.nodes
+                  if isinstance(n.op, ScanOp) and n.op.spec is None
+                  and n.op.selection is None]
+    assert {n.key() for n in joins} <= keys
+    assert {n.key() for n in sel_scans} <= keys
+    assert not ({n.key() for n in bare_scans} & keys)
+
+
+def test_pass_pipeline_stages():
+    names = [p.__name__ for p in PASSES]
+    assert names == ["_pass_classify", "_pass_reroot_guard", "_pass_lower",
+                     "_pass_fkpk_degrade", "_pass_attach_selections"]
+
+
+def test_fkpk_pass_rewrites_the_lowered_graph(schema):
+    """§4.3 as an IR rewrite: the FK/PK plan differs from the plain plan
+    only in degraded join nodes — scans keep their identity keys."""
+    q = parse_sql("""SELECT MEDIAN(ps.ps_supplycost)
+        FROM partsupp ps, part p
+        WHERE ps.ps_partkey = p.p_partkey""", schema)
+    plain = plan_query(q, schema, mode="opt_plus", use_fkpk=False)
+    fkpk = plan_query(q, schema, mode="opt_plus", use_fkpk=True)
+    assert any(isinstance(op, FreqJoinOp) for op in plain.ops)
+    assert any(isinstance(op, SemiJoinOp) for op in fkpk.ops)
+    plain_scans = {n.key() for n in plain.nodes
+                   if isinstance(n.op, ScanOp)}
+    fkpk_scans = {n.key() for n in fkpk.nodes if isinstance(n.op, ScanOp)}
+    assert plain_scans == fkpk_scans
+
+
+def test_opaque_selection_keys_are_object_bound():
+    q1 = AggQuery(atoms=(Atom("part", "p", ("pk", "price")),),
+                  aggregates=(Agg("count"),),
+                  selections={"p": lambda c: c["p_price"] > 100})
+    _, schema = make_tpch_db(scale=5)
+    p1 = plan_query(q1, schema)
+    p2 = plan_query(q1, schema)
+    assert p1.root.key() == p2.root.key()   # same callable object → equal

@@ -1,10 +1,10 @@
 """Serving tier: fingerprint invariance, plan cache, shape buckets,
-micro-batching, and the eager fallback."""
+micro-batching, lock granularity, and the eager fallback."""
 
 import threading
+import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -321,6 +321,70 @@ def test_service_concurrent_submissions_are_safe():
     assert not errors
     assert len(set(outs)) == 1
     assert svc.metrics()["compiles"] == 1
+
+
+def test_metrics_and_updates_not_blocked_by_compile():
+    """Regression: the service lock guards only cache/db mutation — a
+    long XLA compile in one thread must not block ``metrics()`` (or
+    ``update_table``) in another."""
+    db, schema = make_tpch_db(scale=30, seed=11)
+    svc = QueryService(db, schema)
+    compiling = threading.Event()
+    release = threading.Event()
+    real_compile = svc._jit_executor.compile
+
+    def slow_compile(plan):
+        compiling.set()
+        assert release.wait(30), "test orchestration stalled"
+        return real_compile(plan)
+
+    svc._jit_executor.compile = slow_compile
+    out: list = []
+    t = threading.Thread(target=lambda: out.append(svc.submit(FIG1)))
+    t.start()
+    try:
+        assert compiling.wait(30)
+        t0 = time.perf_counter()
+        m = svc.metrics()                       # must not wait on compile
+        grown = {k: np.asarray(v)
+                 for k, v in db["region"].columns.items()}
+        svc.update_table("region", Table.from_numpy(grown))
+        blocked_s = time.perf_counter() - t0
+    finally:
+        release.set()
+        t.join(60)
+    assert blocked_s < 1.0
+    assert m["requests"] == 1 and m["compiles"] == 0
+    assert out and "min(s.s_acctbal)" in out[0].values
+
+
+def test_concurrent_cold_submissions_compile_once():
+    """Two threads racing on the same cold fingerprint: the in-flight
+    event makes the second wait for the first's executable instead of
+    compiling its own."""
+    db, schema = make_tpch_db(scale=30, seed=12)
+    svc = QueryService(db, schema)
+    results: list = []
+    errors: list = []
+
+    def worker(sql):
+        try:
+            r = svc.submit(sql)
+            key = next(k for k in r.values if k.startswith("min"))
+            results.append(float(r.values[key]))
+        except Exception as e:  # pragma: no cover
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker,
+                                args=(FIG1 if i % 2 else FIG1_RENAMED,))
+               for i in range(6)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    assert svc.metrics()["compiles"] == 1
+    assert len(set(results)) == 1
 
 
 def test_compile_rejects_eager_only_options():
