@@ -16,19 +16,26 @@ measures the properties the serving tier exists for:
   5. partial fusion across join shapes: a workload where every whole plan
      prefix is distinct (so PR 2's equal-prefix rule fuses nothing) must
      still fuse via shared subplans — gated on the ``partial_fusions`` and
-     ``subplan_saved`` counters.
+     ``subplan_saved`` counters;
+  6. cross-CALLER batch formation: N threads each submitting ONE query via
+     ``submit_async`` land in one batching window, so the scheduler runs
+     fewer fused compiles than there are requests or even distinct
+     fingerprints, with answers bitwise-identical to serial ``submit``
+     calls — and a malformed query in the window fails only its own
+     future while every valid batch-mate is still answered.
 
     PYTHONPATH=src python benchmarks/serving_queries.py [--tiny] [--smoke]
 
-``--smoke`` runs only the fused-batching + mixed-shape scenarios on tiny
-tables and asserts cache/fusion counters and answer identity (no timing
-gates) — what ``scripts/verify.sh --smoke`` runs so serving regressions
-fail CI fast.
+``--smoke`` runs only the fused-batching + mixed-shape + async scenarios
+on tiny tables and asserts cache/fusion/scheduler counters and answer
+identity (no timing gates) — what ``scripts/verify.sh --smoke`` runs so
+serving regressions fail CI fast.
 """
 
 from __future__ import annotations
 
 import argparse
+import threading
 import time
 
 import jax
@@ -363,6 +370,102 @@ def check_mixed(rm: dict) -> list[str]:
     return fails
 
 
+def run_async(scale: int = 1000, threads: int = 8, seed: int = 0):
+    """Concurrent-callers scenario: `threads` independent threads each
+    submit ONE query from the shared-subplan dashboard via
+    ``submit_async``.  The background batcher forms the batch, so the
+    requests fuse exactly as a single ``submit_many`` caller's would —
+    fewer compiles than requests — and answers are bitwise-identical to
+    serial ``submit`` calls.  A follow-up window co-batches a malformed
+    query with a valid one to show per-request fault isolation."""
+    db, schema = make_tpch_db(scale=scale, seed=seed)
+    sqls = [sql for _, sql in DASHBOARD_QUERIES]
+    work = [sqls[i % len(sqls)] for i in range(threads)]
+
+    svc_serial = QueryService(db, schema)
+    t0 = time.perf_counter()
+    serial = [svc_serial.submit(sql) for sql in work]
+    serial_s = time.perf_counter() - t0
+
+    # a wide formation window: the barrier releases all threads at once,
+    # so one window captures every caller deterministically
+    svc = QueryService(db, schema, async_max_wait_ms=500,
+                       async_max_batch=max(64, threads))
+    barrier = threading.Barrier(threads)
+    futs: list = [None] * threads
+
+    def caller(i):
+        barrier.wait()
+        futs[i] = svc.submit_async(work[i])
+
+    callers = [threading.Thread(target=caller, args=(i,))
+               for i in range(threads)]
+    t0 = time.perf_counter()
+    for t in callers:
+        t.start()
+    for t in callers:
+        t.join()
+    results = [f.result(300) for f in futs]
+    async_s = time.perf_counter() - t0
+
+    identical = all(r.error is None and _values_equal(a.values, r.values)
+                    for a, r in zip(serial, results))
+
+    # fault isolation across callers: a malformed query co-batched with a
+    # valid one must fail alone
+    bad_fut = svc.submit_async("SELECT MIN(x.nope) FROM no_such_relation x")
+    good_fut = svc.submit_async(sqls[0])
+    bad_error = bad_fut.exception(300)
+    good_res = good_fut.result(300)
+    good_ok = (good_res.error is None
+               and _values_equal(good_res.values, serial[0].values))
+
+    m = svc.metrics()
+    svc.close()
+    return {
+        "threads": threads,
+        "distinct": len(set(work)),
+        "serial_s": serial_s,
+        "async_s": async_s,
+        "identical": identical,
+        "bad_error": bad_error,
+        "good_ok": good_ok,
+        "serial_compiles": svc_serial.metrics()["compiles"],
+        "metrics": m,
+    }
+
+
+def check_async(ra: dict) -> list[str]:
+    """Gate the concurrent-callers scenario; returns failures."""
+    fails = []
+    m = ra["metrics"]
+    if not ra["identical"]:
+        fails.append("async answers differ from serial submit calls")
+    if m["async_batches"] < 1:
+        fails.append("async_batches=0 — the background batcher never ran")
+    if m["async_requests"] < ra["threads"]:
+        fails.append(f"async_requests={m['async_requests']} < "
+                     f"{ra['threads']} submitted")
+    if m["fused_compiles"] >= ra["distinct"]:
+        fails.append(f"fused_compiles={m['fused_compiles']} not below "
+                     f"{ra['distinct']} distinct fingerprints — "
+                     "cross-caller batch formation is not fusing")
+    if m["compiles"] >= ra["threads"]:
+        fails.append(f"compiles={m['compiles']} >= {ra['threads']} "
+                     "requests — no cross-caller amortisation")
+    if ra["bad_error"] is None:
+        fails.append("malformed query's future did not carry its error")
+    if not ra["good_ok"]:
+        fails.append("valid batch-mate of the malformed query was not "
+                     "answered correctly")
+    if m["request_errors"] != 1:
+        fails.append(f"request_errors={m['request_errors']} != 1")
+    if m["rejected"] != 0:
+        fails.append(f"rejected={m['rejected']} — queue backpressure "
+                     "tripped on an idle-sized workload")
+    return fails
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--tiny", action="store_true",
@@ -414,6 +517,23 @@ def main(argv=None):
     if not args.smoke and rm["fused_s"] >= rm["solo_s"]:
         fused_fails.append(f"mixed-shape fused wall {rm['fused_s']:.3f}s "
                            f"not below individual {rm['solo_s']:.3f}s")
+
+    ra = run_async(scale=scale, threads=8)
+    ma = ra["metrics"]
+    print(f"concurrent callers {ra['threads']} threads × 1 query "
+          f"({ra['distinct']} distinct fingerprints)")
+    print(f"  serial          {ra['serial_s'] * 1e3:>10.1f} ms "
+          f"({ra['serial_compiles']} compiles)")
+    print(f"  async batched   {ra['async_s'] * 1e3:>10.1f} ms "
+          f"({ma['compiles']} compiles, "
+          f"{ma['async_batches']} async batches)")
+    print(f"  identical={ra['identical']} "
+          f"async_requests={ma['async_requests']} "
+          f"queue_depth_peak={ma['queue_depth_peak']} "
+          f"rejected={ma['rejected']} "
+          f"bad-query isolated={ra['bad_error'] is not None and ra['good_ok']}")
+    fused_fails += check_async(ra)
+
     if args.smoke:
         for f in fused_fails:
             print(f"FAIL: {f}")

@@ -137,6 +137,70 @@ def serving_example():
         print(plan.describe())
 
 
+def async_serving_example():
+    """Async serving: cross-caller batch formation.
+
+    ``submit_many`` fuses whatever ONE caller hands it; ``submit_async``
+    extends that to independent callers.  Each call enqueues its query on
+    a bounded admission queue and returns a future; a background batcher
+    drains the queue on a small time window and serves the whole window
+    through the same fusion pipeline — so eight clients submitting one
+    dashboard panel each still share subplan work and compiled programs.
+    A malformed query fails only its own future (per-request fault
+    isolation); a full queue rejects with AdmissionError (backpressure).
+    """
+    import threading
+
+    from repro.service import QueryService
+
+    db, schema = make_tpch_db(scale=500, seed=0)
+    # widen the batching window so this demo's "clients" reliably land in
+    # one batch; production keeps it at a couple of milliseconds
+    svc = QueryService(db, schema, async_max_wait_ms=300)
+
+    dims = """FROM supplier s, nation n, region r
+        WHERE s.s_nationkey = n.n_nationkey
+          AND n.n_regionkey = r.r_regionkey AND r.r_name IN (2, 3)"""
+    panels = [
+        f"SELECT MIN(s.s_acctbal), MAX(s.s_acctbal) {dims}",
+        f"SELECT SUM(s.s_acctbal) {dims}",
+        f"SELECT MEDIAN(s.s_acctbal) {dims}",
+        f"SELECT COUNT(*) AS cnt, AVG(s.s_acctbal) AS avg {dims} "
+        "GROUP BY s.s_nationkey",
+    ]
+
+    # eight independent "clients", one query each, submitting concurrently
+    work = [panels[i % len(panels)] for i in range(8)]
+    barrier = threading.Barrier(len(work))
+    futs = [None] * len(work)
+
+    def client(i):
+        barrier.wait()
+        futs[i] = svc.submit_async(work[i])
+
+    threads = [threading.Thread(target=client, args=(i,))
+               for i in range(len(work))]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    results = [f.result(120) for f in futs]
+    m = svc.metrics()
+    print(f"\n[async] {len(work)} callers × 1 query → "
+          f"{m['async_batches']} batch(es), {m['compiles']} compiles "
+          f"(fused={m['fused_compiles']}), "
+          f"fused_group_size={results[0].stats.fused_group_size}")
+
+    # per-request fault isolation: the bad query fails alone
+    bad = svc.submit_async("SELECT MIN(x.oops) FROM no_such_table x")
+    good = svc.submit_async(panels[0])
+    err, res = bad.exception(120), good.result(120)
+    print(f"[async] malformed batch-mate: error={type(err).__name__} "
+          f"(\"{err}\"), valid mate answered="
+          f"{res.error is None and bool(res.values)}")
+    svc.close()
+
+
 def sql_example():
     """Same query through the SQL front-end."""
     from repro.core import parse_sql
@@ -162,3 +226,4 @@ if __name__ == "__main__":
     main()
     sql_example()
     serving_example()
+    async_serving_example()

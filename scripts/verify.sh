@@ -3,10 +3,13 @@
 # green.
 #
 #   scripts/verify.sh            # lint + full pytest + tiny serving bench
-#   scripts/verify.sh --smoke    # lint + fusion-counter smoke only (fast):
-#                                # asserts the fused-dashboard counters AND
+#   scripts/verify.sh --smoke    # lint + serving-counter smoke only (fast):
+#                                # asserts the fused-dashboard counters,
 #                                # partial_fusions > 0 / subplan_saved > 0
-#                                # on the mixed-join-shape workload
+#                                # on the mixed-join-shape workload, AND the
+#                                # concurrent-callers scenario (async_batches
+#                                # > 0, fused compiles < async requests,
+#                                # malformed batch-mates isolated)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -16,7 +19,7 @@ echo "== lint (ruff/pyflakes, or built-in fallback) =="
 python scripts/lint.py
 
 if [[ "${1:-}" == "--smoke" ]]; then
-  echo "== smoke: fused + mixed-join-shape counters =="
+  echo "== smoke: fused + mixed-join-shape + concurrent-caller counters =="
   python benchmarks/serving_queries.py --smoke
   exit 0
 fi

@@ -2,9 +2,9 @@
 
 Guarded aggregate plans are static-dataflow programs — compile once, serve
 many.  This package owns everything between "SQL arrives" and "compiled
-program runs": query fingerprinting (``fingerprint``), the two-level plan
-cache (``plan_cache``), and the concurrent micro-batching engine
-(``engine``).
+program runs": query fingerprinting (``fingerprint``), the multi-level
+plan cache (``plan_cache``), the concurrent micro-batching engine
+(``engine``), and the async cross-caller batch former (``scheduler``).
 """
 
 from repro.service.engine import (
@@ -20,9 +20,11 @@ from repro.service.fingerprint import (
     prefix_fingerprint,
 )
 from repro.service.plan_cache import LRUCache, PlanCache
+from repro.service.scheduler import AsyncScheduler
 
 __all__ = [
     "AdmissionError",
+    "AsyncScheduler",
     "CanonicalQuery",
     "canonicalize",
     "fingerprint",

@@ -11,22 +11,41 @@ run) into a serving engine:
     res.values, res.stats          # answer + per-query ServeStats
     svc.metrics()                  # cache hit/miss/eviction counters
 
-Request path:
+Request path (shared by sync ``submit``/``submit_many`` and the async
+scheduler — one internal pipeline, ``_serve_batch``):
 
-  1. parse SQL → AggQuery (skipped for AggQuery submissions); admission
-     fails fast — with the relation named — if a query touches a schema
-     relation with no loaded table;
+  1. ADMIT: parse SQL → AggQuery (skipped for AggQuery submissions);
+     admission fails — with the relation named — if a query touches a
+     schema relation with no loaded table.  Failures are captured PER
+     REQUEST: in a batch, a malformed query's error attaches to its own
+     ``QueryResult.error`` (or its future) and never aborts batch-mates;
+     ``submit`` re-raises it for the single-query caller.
   2. canonicalise → fingerprint (alias/variable-name invariant);
-  3. plan cache L1: fingerprint → PhysicalPlan (an op-graph DAG);
+  3. PLAN-UNIT: plan cache L1: fingerprint → PhysicalPlan (an op-graph
+     DAG), built outside the lock behind a per-fingerprint in-flight
+     event; planning failures attach to the unit's requests only;
   4. shape bucket: power-of-two-padded capacities of the scanned
      relations; tables are padded (``Table.pad_to``) to their bucket, so
-     data growth inside a bucket re-uses compiled programs;
-  5. plan cache L2: (fingerprint, bucket) → jitted executable;
-  6. run; results renamed back to the request's output names.
+     data growth inside a bucket re-uses compiled programs.  Padding is
+     device work and runs outside the lock too, against an immutable
+     snapshot of the scanned tables;
+  5. FUSION-GROUP + SERVE: plan cache L2: (fingerprint, bucket) → jitted
+     executable; run; results renamed back to the request's output names.
 
 Micro-batching: ``submit_many`` groups requests sharing a fingerprint and
 runs each group's executable once, fanning the answer out per request
 (each with its own name mapping).
+
+Async serving: ``submit_async`` returns a ``Future[QueryResult]`` and
+hands the query to a lazily-started background batcher
+(``repro.service.scheduler.AsyncScheduler``) that drains its bounded
+admission queue on a max_wait_ms/max_batch window — so N independent
+callers each submitting ONE query still land in one ``_serve_batch``
+call and fuse into the same multi-query XLA programs a single
+``submit_many`` caller would get.  The queue rejects on overflow
+(``AdmissionError`` backpressure); scheduler counters
+(``async_requests``, ``async_batches``, ``queue_depth_peak``,
+``rejected``) ride along in ``metrics()``.
 
 Cross-fingerprint fusion: *different* fingerprints whose plan DAGs share
 at least one non-trivial subplan (``PhysicalPlan.subplan_keys``: a join
@@ -43,10 +62,11 @@ share one whole prefix — fusions the prefix rule would have missed) and
 ``subplan_saved`` (subplan executions avoided by the shared trace memo).
 
 Thread safety: the internal lock guards only cache and database mutation —
-XLA compiles and query execution run outside it, coordinated by per-key
-in-flight events so concurrent cold requests for the same executable
-compile it once.  ``metrics()`` and ``update_table`` never wait behind a
-long compile or an eager baseline run.
+query planning, table padding, XLA compiles, and query execution all run
+outside it, coordinated by per-key in-flight events so concurrent cold
+requests for the same artefact build it once.  ``metrics()`` and
+``update_table`` never wait behind planning, padding, a long compile, or
+an eager baseline run.
 """
 
 from __future__ import annotations
@@ -55,6 +75,7 @@ import dataclasses
 import hashlib
 import threading
 import time
+from concurrent.futures import Future
 from typing import Any, Callable
 
 import jax
@@ -100,14 +121,27 @@ class ServeStats:
 
 @dataclasses.dataclass
 class QueryResult:
+    """One request's answer.  ``error`` is the per-request failure slot:
+    in a batch, a malformed query gets its admission/parse/serve exception
+    here while its batch-mates' results stay intact (``values`` is empty
+    iff ``error`` is set).  ``submit`` re-raises it; the async scheduler
+    moves it onto the request's future."""
+
     values: dict[str, Any]
     stats: ServeStats
+    error: BaseException | None = None
+
+    @property
+    def ok(self) -> bool:
+        return self.error is None
 
 
 @dataclasses.dataclass
 class _Request:
-    canon: CanonicalQuery
+    canon: CanonicalQuery | None
     stats: ServeStats
+    error: BaseException | None = None   # captured per-request failure
+    unit: "_Unit | None" = None          # back-pointer set by _plan_unit
 
 
 @dataclasses.dataclass
@@ -137,28 +171,38 @@ class QueryService:
                  freq_dtype=jnp.int32, backend: str = "xla",
                  interpret: bool = True, dense_domain: bool = False,
                  plan_capacity: int = 256, exec_capacity: int = 512,
-                 fused_capacity: int = 128, min_bucket: int = 8):
+                 fused_capacity: int = 128, padded_capacity: int = 64,
+                 min_bucket: int = 8, async_max_batch: int = 64,
+                 async_max_wait_ms: float = 2.0,
+                 async_max_queue: int = 1024):
         self._db = dict(db)
         self.schema = schema
         self.mode = mode
         self.use_fkpk = use_fkpk
         self.min_bucket = min_bucket
-        self.cache = PlanCache(plan_capacity, exec_capacity, fused_capacity)
+        self.cache = PlanCache(plan_capacity, exec_capacity, fused_capacity,
+                               padded_capacity)
         self._jit_executor = Executor(self._db, schema, freq_dtype, backend,
                                       interpret, dense_domain=dense_domain)
-        self._padded: dict[str, Table] = {}
         # fingerprint → (eager, prefix_key, subplans, sig): the fusion
         # identity is a pure function of the canonical structure, so
         # memoise it across batches (bounded: cleared when it outgrows the
         # plan cache several times over)
         self._segments: dict[str, tuple] = {}
-        # guards cache + db mutation ONLY; compiles and execution run
-        # outside it, serialised per cache key by these in-flight events
+        # guards cache + db mutation ONLY; planning, padding, compiles and
+        # execution run outside it, serialised per cache key by these
+        # in-flight events
         self._lock = threading.RLock()
         self._inflight: dict[tuple, threading.Event] = {}
+        # async tier: started lazily on the first submit_async
+        self._async_opts = (async_max_batch, async_max_wait_ms,
+                            async_max_queue)
+        self._scheduler = None
+        self._async_closed = False
         self._counters = {
             "requests": 0, "batches": 0, "dedup_saved": 0,
             "compiles": 0, "eager_requests": 0,
+            "request_errors": 0,      # per-request captured failures
             "bucket_invalidations": 0,
             # cross-fingerprint fusion
             "fused_batches": 0,       # fused program executions
@@ -202,36 +246,55 @@ class QueryService:
                                          self.min_bucket) \
                 if name in self._db else None
             self._db[name] = table
-            self._padded.pop(name, None)
+            self.cache.drop_padded(name)
             new_bucket = bucket_capacity(table.capacity, self.min_bucket)
             if old_bucket != new_bucket:
                 n = self.cache.invalidate_relation(name)
                 self._counters["bucket_invalidations"] += n
 
     def _snapshot(self, rels) -> tuple[ShapeBucket, dict[str, Table]]:
-        """Shape bucket + bucket-padded table views for `rels`, taken under
-        ONE lock acquisition so they describe the same database state: a
-        concurrent bucket-crossing ``update_table`` can never pair a
-        stale-bucket cache key with fresh-shaped inputs (which would make
-        the cached jitted fn silently retrace inside ``jax.jit``).  Tables
-        are immutable, so the snapshot stays consistent after release."""
+        """Shape bucket + bucket-padded table views for `rels`.
+
+        The raw tables and the bucket are captured under ONE lock
+        acquisition so they describe the same database state: a concurrent
+        bucket-crossing ``update_table`` can never pair a stale-bucket
+        cache key with fresh-shaped inputs (which would make the cached
+        jitted fn silently retrace inside ``jax.jit``).  Tables are
+        immutable, so the snapshot stays consistent after release — which
+        is what lets the padding itself (``Table.pad_to``, device work)
+        run OUTSIDE the lock, serialised per (relation, capacity) by
+        in-flight events exactly like compiles."""
         with self._lock:
+            base = {rel: self._db[rel] for rel in rels}
             bucket: ShapeBucket = tuple(
-                (rel, bucket_capacity(self._db[rel].capacity,
-                                      self.min_bucket))
+                (rel, bucket_capacity(base[rel].capacity, self.min_bucket))
                 for rel in rels)
-            sub_db: dict[str, Table] = {}
-            for rel, cap in bucket:
-                tab = self._padded.get(rel)
-                if tab is None:
-                    self._padded[rel] = tab = self._db[rel].pad_to(cap)
-                sub_db[rel] = tab
-            return bucket, sub_db
+        sub_db = {rel: self._padded_view(rel, base[rel], cap)
+                  for rel, cap in bucket}
+        return bucket, sub_db
+
+    def _padded_view(self, rel: str, table: Table, cap: int) -> Table:
+        """`table` padded to `cap`, from the bounded padded-view cache.
+        Entries are tagged with their source table; a tag mismatch (the
+        relation was swapped after our snapshot) pads fresh but only
+        caches the view while it still describes the live table."""
+        entry, _ = self._get_or_build(
+            self.cache.padded, rel,
+            lambda: (table, table.pad_to(cap)),
+            flight_key=("pad", rel, cap),
+            valid=lambda e: e[0] is table,
+            cache_if=lambda e: self._db.get(rel) is table)
+        return entry[1]
 
     # ---- request plane ---------------------------------------------------
     def submit(self, query) -> QueryResult:
-        """Serve one query (SQL text or AggQuery)."""
-        return self.submit_many([query])[0]
+        """Serve one query (SQL text or AggQuery).  Raises the captured
+        error for a single-query caller (batch callers get it attached to
+        the request's ``QueryResult.error`` instead)."""
+        res = self.submit_many([query])[0]
+        if res.error is not None:
+            raise res.error
+        return res
 
     def submit_many(self, queries) -> list[QueryResult]:
         """Serve a batch of concurrent requests.
@@ -239,35 +302,133 @@ class QueryService:
         Requests sharing a fingerprint are answered by one executable
         invocation; fingerprints whose plan DAGs overlap on any non-trivial
         subplan are fused into one multi-query program compiled and run
-        once, with every shared sub-DAG computed a single time."""
-        reqs = [self._admit(q) for q in queries]
+        once, with every shared sub-DAG computed a single time.
+
+        Fault isolation is per request: an admission/parse/planning/serve
+        failure attaches to the offending request's ``QueryResult.error``
+        and never aborts its batch-mates."""
+        queries = list(queries)          # accept any iterable
+        if not queries:
+            return []                    # no work: don't count a batch
         with self._lock:
-            groups: dict[str, list[_Request]] = {}
-            for r in reqs:
-                groups.setdefault(r.canon.fingerprint, []).append(r)
-            self._counters["requests"] += len(reqs)
+            # every submission counts, admitted or not — request_errors /
+            # requests is then a meaningful error rate
+            self._counters["requests"] += len(queries)
+        reqs = [self._try_admit(q) for q in queries]
+        served = self._serve_batch([r for r in reqs if r.error is None])
+        out = []
+        for r in reqs:
+            res = served.get(id(r))
+            if res is None:              # admission/parse failure
+                res = QueryResult({}, r.stats, error=r.error)
+            out.append(res)
+        errors = sum(1 for res in out if res.error is not None)
+        if errors:
+            with self._lock:
+                self._counters["request_errors"] += errors
+        return out
+
+    def submit_async(self, query) -> Future[QueryResult]:
+        """Queue one query for background batch formation; returns a
+        ``concurrent.futures.Future`` resolving to its ``QueryResult``
+        (or raising its captured per-request error).
+
+        Queries from independent callers that land in the same batching
+        window are served by ONE ``_serve_batch`` call, so they dedup,
+        fuse, and share compiled programs exactly as if a single caller
+        had handed them to ``submit_many``.  Raises ``AdmissionError``
+        when the bounded admission queue is full (backpressure)."""
+        sch = self._scheduler
+        if sch is None:
+            from repro.service.scheduler import AsyncScheduler
+            with self._lock:
+                if self._async_closed:
+                    raise RuntimeError("service closed: the async tier is "
+                                       "stopped (sync submit still works)")
+                if self._scheduler is None:
+                    max_batch, max_wait_ms, max_queue = self._async_opts
+                    self._scheduler = AsyncScheduler(
+                        self, max_batch=max_batch, max_wait_ms=max_wait_ms,
+                        max_queue=max_queue)
+                sch = self._scheduler
+        return sch.submit_async(query)
+
+    def close(self, timeout: float | None = 10.0) -> None:
+        """Stop the async batcher (if started), draining queued requests.
+        Terminal for the async tier — later ``submit_async`` calls raise —
+        while sync submission keeps working."""
+        with self._lock:
+            self._async_closed = True
+            sch = self._scheduler
+        if sch is not None:
+            sch.close(timeout=timeout)
+
+    def _serve_batch(self, reqs: list[_Request]) -> dict[int, QueryResult]:
+        """The batch pipeline: fingerprint-group → plan-unit →
+        fusion-group → serve → per-request results, keyed by request id.
+        Shared by sync ``submit_many`` and the async scheduler; errors
+        attach to the affected requests, never to the batch."""
+        if not reqs:
+            return {}
+        groups: dict[str, list[_Request]] = {}
+        for r in reqs:
+            groups.setdefault(r.canon.fingerprint, []).append(r)
+        with self._lock:
             self._counters["batches"] += 1
             for group in groups.values():
                 self._counters["dedup_saved"] += len(group) - 1
-            units = [self._plan_unit(group) for group in groups.values()]
+
+        units = []
+        for group in groups.values():
+            try:
+                units.append(self._plan_unit(group))
+            except Exception as e:       # planning failed: this unit only
+                for r in group:
+                    r.error = e
 
         eagers, singles, fused_groups = self._fusion_groups(units)
         for u in eagers:
-            self._serve_eager(u)
+            self._try_serve(self._serve_eager, u)
         for u in singles:
-            self._serve_single(u)
+            self._try_serve(self._serve_single, u)
         for us in fused_groups:
-            self._serve_fused(us)
+            try:
+                self._serve_fused(us)
+            except Exception:
+                # the fused program failed as a whole — fall back to
+                # serving each member singly, so only the member(s) that
+                # actually cannot serve carry an error
+                for u in us:
+                    self._try_serve(self._serve_single, u)
 
         results: dict[int, QueryResult] = {}
-        for u in units:
-            for i, r in enumerate(u.group):
+        for group in groups.values():
+            for i, r in enumerate(group):
+                if r.error is not None:
+                    results[id(r)] = QueryResult({}, r.stats, error=r.error)
+                    continue
                 r.stats.shared_execution = i > 0
                 r.stats.total_s = (r.stats.parse_s + r.stats.plan_s
                                    + r.stats.compile_s + r.stats.run_s)
                 results[id(r)] = QueryResult(
-                    r.canon.rename_results(u.results), r.stats)
-        return [results[id(r)] for r in reqs]
+                    r.canon.rename_results(r.unit.results), r.stats)
+        return results
+
+    def _try_admit(self, query) -> _Request:
+        """Admission with per-request error capture."""
+        try:
+            return self._admit(query)
+        except Exception as e:
+            return _Request(canon=None, stats=ServeStats(), error=e)
+
+    def _try_serve(self, serve: Callable, u: _Unit) -> None:
+        """Run one unit's serve step, attaching a failure to that unit's
+        requests instead of propagating it into batch-mates."""
+        try:
+            serve(u)
+        except Exception as e:
+            for r in u.group:
+                r.error = e
 
     def _admit(self, query) -> _Request:
         stats = ServeStats()
@@ -291,15 +452,19 @@ class QueryService:
 
     def _plan_unit(self, group: list[_Request]) -> _Unit:
         """L1 plan-cache lookup + fusion identity for one fingerprint
-        group.  Caller holds the lock."""
+        group.  Runs WITHOUT the service lock: the rewrite pipeline
+        (``plan_query``) executes behind a per-fingerprint in-flight event
+        like any other cache build, so a slow plan never blocks
+        ``metrics()``/``update_table`` or unrelated fingerprints."""
         canon = group[0].canon
         t0 = time.perf_counter()
-        plan, plan_hit = self.cache.get_plan(
-            canon.fingerprint,
+        plan, plan_hit = self._get_or_build(
+            self.cache.plans, canon.fingerprint,
             lambda: plan_query(canon.query, self.schema, mode=self.mode,
                                use_fkpk=self.use_fkpk))
         plan_s = time.perf_counter() - t0
-        seg = self._segments.get(canon.fingerprint)
+        with self._lock:
+            seg = self._segments.get(canon.fingerprint)
         if seg is None:
             eager = any(isinstance(op, MaterializeJoinOp) for op in plan.ops)
             if eager:
@@ -313,12 +478,16 @@ class QueryService:
                 seg = (False, segment_plan(plan).prefix_key,
                        plan.subplan_keys(),
                        gk if gk is not None else canon.fingerprint)
-            if len(self._segments) > 4 * self.cache.plans.capacity:
-                self._segments.clear()
-            self._segments[canon.fingerprint] = seg
+            with self._lock:
+                if len(self._segments) > 4 * self.cache.plans.capacity:
+                    self._segments.clear()
+                self._segments[canon.fingerprint] = seg
         eager, prefix_key, subplans, sig = seg
-        return _Unit(group, plan, plan_hit, plan_s, eager, prefix_key,
+        unit = _Unit(group, plan, plan_hit, plan_s, eager, prefix_key,
                      subplans, sig)
+        for r in group:
+            r.unit = unit
+        return unit
 
     def _fusion_groups(self, units: list[_Unit]):
         """Partition a batch: eager fallbacks, lone jittable units, and
@@ -355,32 +524,49 @@ class QueryService:
         return eagers, singles, fused_groups
 
     # ---- execution -------------------------------------------------------
-    def _get_or_build(self, cache: LRUCache, key, build: Callable):
-        """Executable-cache access with the lock held only around the cache
-        itself: a miss releases the lock, compiles, and re-inserts, while
-        concurrent requests for the SAME key wait on an in-flight event
-        instead of compiling twice (and requests for other keys — or
-        ``metrics()``/``update_table`` — proceed untouched)."""
-        flight_key = (id(cache), key)
+    _MISSING = object()
+
+    def _get_or_build(self, cache: LRUCache, key, build: Callable, *,
+                      flight_key: tuple | None = None,
+                      valid: Callable | None = None,
+                      cache_if: Callable | None = None):
+        """Cache access with the lock held only around the cache itself: a
+        miss releases the lock, builds (compile / plan rewrite / padding),
+        and re-inserts, while concurrent requests for the SAME key wait on
+        an in-flight event instead of building twice (and requests for
+        other keys — or ``metrics()``/``update_table`` — proceed
+        untouched).
+
+        ``valid`` lets a caller reject a cached entry (treated as a miss
+        to rebuild, counted as neither hit nor eviction); ``cache_if``
+        gates insertion of a freshly built value (evaluated under the
+        lock) for builds that may already be stale by the time they
+        finish.  Exactly one hit or miss is counted per logical access,
+        however many times the wait loop spins."""
+        fk = (id(cache), key) if flight_key is None else flight_key
         while True:
             with self._lock:
-                if key in cache:
-                    return cache.get(key), True
-                ev = self._inflight.get(flight_key)
+                value = cache.peek(key, self._MISSING)
+                if value is not self._MISSING and (valid is None
+                                                   or valid(value)):
+                    cache.note_hit(key)
+                    return value, True
+                ev = self._inflight.get(fk)
                 if ev is None:
                     ev = threading.Event()
-                    self._inflight[flight_key] = ev
+                    self._inflight[fk] = ev
                     break
             ev.wait()
         try:
             value = build()
             with self._lock:
                 cache.misses += 1
-                cache.put(key, value)
+                if cache_if is None or cache_if(value):
+                    cache.put(key, value)
             return value, False
         finally:
             with self._lock:
-                self._inflight.pop(flight_key, None)
+                self._inflight.pop(fk, None)
             ev.set()
 
     def _finish_unit(self, u: _Unit, results: dict, *, exec_hit: bool,
@@ -504,10 +690,18 @@ class QueryService:
             r.stats.exec_stats = stats
 
     # ---- observability ---------------------------------------------------
+    _ASYNC_ZEROS = {"async_requests": 0, "async_batches": 0,
+                    "queue_depth_peak": 0, "rejected": 0}
+
     def metrics(self) -> dict[str, Any]:
         with self._lock:
             out = dict(self._counters)
             out.update(self.cache.metrics())
             out["compile_s_total"] = self._compile_s_total
-            out["padded_relations"] = len(self._padded)
-            return out
+            out["padded_relations"] = len(self.cache.padded)
+            sch = self._scheduler
+        # the scheduler snapshots its own counters under its own lock —
+        # taken outside ours so the two never nest
+        out.update(sch.metrics() if sch is not None
+                   else dict(self._ASYNC_ZEROS))
+        return out

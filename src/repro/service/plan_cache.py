@@ -15,6 +15,13 @@ recompiles nothing.  The signature hashes the sorted member graph keys
 (``PhysicalPlan.graph_key``), so any request order for the same query set
 hits the same compiled program.
 
+A fourth, data-plane level caches the bucket-padded table *views*
+(``Table.pad_to`` output) per relation, entries tagged with their source
+table so a view is never served against swapped-in data: ``update_table``
+calls ``drop_padded`` and the engine re-validates the tag on every read.
+Padding is device work, so bounding this level (LRU) keeps a service that
+has touched many relations from pinning every padded copy forever.
+
 All levels are bounded LRU with hit/miss/eviction counters; ``metrics()``
 flattens them into the dict the serving engine exposes.
 """
@@ -23,8 +30,6 @@ from __future__ import annotations
 
 from collections import OrderedDict
 from typing import Any, Callable, Hashable
-
-from repro.core.plan import PhysicalPlan
 
 ShapeBucket = tuple[tuple[str, int], ...]
 
@@ -56,6 +61,18 @@ class LRUCache:
             return self._d[key]
         self.misses += 1
         return default
+
+    def peek(self, key, default=None):
+        """Read without touching counters or LRU order — for callers that
+        must validate the entry before deciding whether this was really a
+        hit (see the serving engine's ``_get_or_build``)."""
+        return self._d.get(key, default)
+
+    def note_hit(self, key) -> None:
+        """Record the hit a prior ``peek`` deferred: one counter bump and
+        an LRU refresh."""
+        self._d.move_to_end(key)
+        self.hits += 1
 
     def put(self, key, value) -> None:
         if key in self._d:
@@ -89,26 +106,31 @@ class LRUCache:
 
 
 class PlanCache:
-    """Three levels:
+    """Four levels:
 
     * ``plans`` — fingerprint → PhysicalPlan;
     * ``execs`` — (fingerprint, ShapeBucket) → single-query executable;
     * ``fused`` — (merged-graph signature, ShapeBucket) → fused
       multi-query executable.  The signature content-addresses the whole
       member set (sorted graph keys), so it is order-invariant and safe
-      across structurally-identical query sets.
+      across structurally-identical query sets;
+    * ``padded`` — relation name → (source Table, bucket-padded view).
+      The source-table tag is the consistency check: readers compare it
+      against their own database snapshot and ignore (then overwrite)
+      entries padded from data that has since been swapped out.
     """
 
     def __init__(self, plan_capacity: int = 256, exec_capacity: int = 512,
-                 fused_capacity: int = 128):
+                 fused_capacity: int = 128, padded_capacity: int = 64):
         self.plans = LRUCache(plan_capacity)
         self.execs = LRUCache(exec_capacity)
         self.fused = LRUCache(fused_capacity)
+        self.padded = LRUCache(padded_capacity)
 
     # single source of the executable-cache key shapes: the serving engine
-    # (which accesses the LRUs directly to keep compiles outside its lock)
-    # and the get_* conveniences below both build keys here, and
-    # ``invalidate_relation`` relies on the bucket sitting last
+    # accesses the LRUs directly (to keep builds outside its lock) but
+    # builds its keys here, and ``invalidate_relation`` relies on the
+    # bucket sitting last
     @staticmethod
     def exec_key(fingerprint: str, bucket: ShapeBucket) -> tuple:
         return (fingerprint, bucket)
@@ -116,10 +138,6 @@ class PlanCache:
     @staticmethod
     def fused_key(signature: str, bucket: ShapeBucket) -> tuple:
         return (signature, bucket)
-
-    def get_plan(self, fingerprint: str,
-                 factory: Callable[[], PhysicalPlan]) -> tuple[PhysicalPlan, bool]:
-        return self.plans.get_or_create(fingerprint, factory)
 
     def get_executable(self, fingerprint: str, bucket: ShapeBucket,
                        factory: Callable[[], Callable]) -> tuple[Callable, bool]:
@@ -137,10 +155,15 @@ class PlanCache:
         return (self.execs.invalidate_if(stale)
                 + self.fused.invalidate_if(stale))
 
+    def drop_padded(self, rel: str) -> None:
+        """Forget the padded view for `rel` (its source table was swapped).
+        Not an eviction: the entry is simply stale."""
+        self.padded.invalidate_if(lambda k: k == rel)
+
     def metrics(self) -> dict[str, int]:
         out = {}
         for level, cache in (("plan", self.plans), ("exec", self.execs),
-                             ("fused", self.fused)):
+                             ("fused", self.fused), ("padded", self.padded)):
             for k, v in cache.counters().items():
                 out[f"{level}_{k}"] = v
         return out

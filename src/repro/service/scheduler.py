@@ -1,0 +1,195 @@
+"""Async submission tier: cross-caller batch formation for QueryService.
+
+``QueryService.submit_many`` already fuses everything ONE caller hands it
+— requests sharing a fingerprint dedup to one execution, and distinct
+fingerprints whose op-graph DAGs overlap on content-addressed subplans
+compile into one multi-query XLA program.  What it cannot do is fuse
+across *callers*: a dashboard fleet where every client submits its own
+single query gets N independent pipelines and N compiles.
+
+``AsyncScheduler`` closes that gap with the classic batch-formation
+pattern:
+
+* ``submit_async(query) -> Future[QueryResult]`` appends the request to a
+  bounded admission queue and returns immediately.  A full queue rejects
+  with ``AdmissionError`` — backpressure the caller can see and retry —
+  rather than growing without bound under overload.
+* A background batcher thread drains the queue on a window: it wakes on
+  the first enqueue, then waits up to ``max_wait_ms`` for co-arriving
+  requests (or until ``max_batch`` are pending), and hands the whole
+  window to the engine's shared batch pipeline
+  (``QueryService._serve_batch`` via ``submit_many``) in one call.  There
+  the op-graph IR's ``subplan_keys()`` union-find forms fusion groups
+  exactly as for a single-caller batch — so N callers × one query each
+  still share subplan work and compiled programs.
+* Results fan back out per request: each future resolves to its own
+  ``QueryResult`` (output names included), and a request whose
+  admission/parse/serve failed gets ITS exception set on ITS future —
+  batch-mates are never aborted (the engine's per-request fault
+  isolation).
+
+Counters (``async_requests``, ``async_batches``, ``queue_depth_peak``,
+``rejected``) are merged into ``QueryService.metrics()``.
+
+Latency/throughput trade-off: ``max_wait_ms`` is the most a lone request
+waits for company; under load the window closes early at ``max_batch``,
+so the added latency shrinks exactly when batching pays most.
+"""
+
+from __future__ import annotations
+
+import collections
+import threading
+import time
+import weakref
+from concurrent.futures import Future, InvalidStateError
+from typing import TYPE_CHECKING
+
+if TYPE_CHECKING:  # import cycle guard: engine lazily imports this module
+    from repro.service.engine import QueryResult, QueryService
+
+
+def _resolve(fut: Future, result=None, error: BaseException | None = None):
+    """Set a future's outcome, tolerating a caller-side cancel race."""
+    try:
+        if error is not None:
+            fut.set_exception(error)
+        else:
+            fut.set_result(result)
+    except InvalidStateError:
+        pass  # the caller cancelled while we were serving — drop the answer
+
+
+class AsyncScheduler:
+    """Background batcher turning independent ``submit_async`` callers
+    into fused ``submit_many`` batches.  See the module docstring."""
+
+    def __init__(self, service: QueryService, *, max_batch: int = 64,
+                 max_wait_ms: float = 2.0, max_queue: int = 1024):
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        if max_queue < 1:
+            raise ValueError("max_queue must be >= 1")
+        if max_wait_ms < 0:
+            raise ValueError("max_wait_ms must be >= 0")
+        # weak: the service owns the scheduler, never the reverse.  The
+        # batcher thread references only this object, so an IDLE dropped
+        # service (tables, caches, executables and all) stays collectable
+        # even if the owner forgot to call close() — the idle heartbeat
+        # below notices the dead ref and lets the thread exit.  While
+        # requests are pending, ``_keepalive`` pins the service so
+        # in-flight futures always get served.
+        self._service_ref = weakref.ref(service)
+        self._keepalive: QueryService | None = None
+        self._max_batch = max_batch
+        self._max_wait_s = max_wait_ms / 1e3
+        self._max_queue = max_queue
+        self._queue: collections.deque[tuple[object, Future]] = \
+            collections.deque()
+        self._cv = threading.Condition()
+        self._closed = False
+        self._counters = {"async_requests": 0, "async_batches": 0,
+                          "queue_depth_peak": 0, "rejected": 0}
+        self._thread = threading.Thread(target=self._drain_loop,
+                                        name="query-service-batcher",
+                                        daemon=True)
+        self._thread.start()
+
+    # ---- caller side -----------------------------------------------------
+    def submit_async(self, query) -> Future[QueryResult]:
+        """Enqueue one query; returns its future.  Raises
+        ``AdmissionError`` when the admission queue is full."""
+        from repro.service.engine import AdmissionError
+        fut: Future = Future()
+        with self._cv:
+            if self._closed:
+                raise RuntimeError("scheduler is closed")
+            if len(self._queue) >= self._max_queue:
+                self._counters["rejected"] += 1
+                raise AdmissionError(
+                    f"admission queue full ({self._max_queue} requests "
+                    "pending); backpressure — retry later")
+            self._queue.append((query, fut))
+            self._keepalive = self._service_ref()  # pin while work pends
+            self._counters["async_requests"] += 1
+            self._counters["queue_depth_peak"] = max(
+                self._counters["queue_depth_peak"], len(self._queue))
+            self._cv.notify_all()
+        return fut
+
+    def metrics(self) -> dict[str, int]:
+        with self._cv:
+            return dict(self._counters)
+
+    def close(self, timeout: float | None = 10.0) -> None:
+        """Stop the batcher.  Requests already queued are drained and
+        answered first; anything still pending after `timeout` fails with
+        ``RuntimeError``."""
+        with self._cv:
+            self._closed = True
+            self._cv.notify_all()
+        self._thread.join(timeout)
+        with self._cv:
+            leftovers = list(self._queue)
+            self._queue.clear()
+        for _, fut in leftovers:  # join timed out mid-drain
+            _resolve(fut, error=RuntimeError("scheduler closed before the "
+                                             "request could be served"))
+
+    # ---- batcher side ----------------------------------------------------
+    def _drain_loop(self) -> None:
+        while True:
+            batch = self._next_batch()
+            if batch is None:
+                return
+            try:
+                self._serve(batch)
+            finally:
+                with self._cv:
+                    if not self._queue:      # idle again: unpin the service
+                        self._keepalive = None
+
+    def _next_batch(self) -> list[tuple[object, Future]] | None:
+        """Block until work arrives, hold the formation window open, then
+        claim up to ``max_batch`` requests.  None means closed + drained
+        (or the owning service was garbage-collected)."""
+        with self._cv:
+            while not self._queue:
+                if self._closed or self._service_ref() is None:
+                    return None
+                # bounded wait: the heartbeat re-checks service liveness
+                self._cv.wait(timeout=1.0)
+            # formation window: wait for co-arriving callers (skipped when
+            # the queue is already a full batch, or on shutdown)
+            deadline = time.monotonic() + self._max_wait_s
+            while len(self._queue) < self._max_batch and not self._closed:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    break
+                self._cv.wait(remaining)
+            n = min(len(self._queue), self._max_batch)
+            batch = [self._queue.popleft() for _ in range(n)]
+            self._counters["async_batches"] += 1
+        return batch
+
+    def _serve(self, batch: list[tuple[object, Future]]) -> None:
+        """One shared pipeline run for the whole window; per-request
+        fan-out of answers and captured errors onto the futures."""
+        service = self._service_ref()
+        if service is None:
+            for _, fut in batch:
+                _resolve(fut, error=RuntimeError(
+                    "QueryService was garbage-collected before the "
+                    "request could be served"))
+            return
+        try:
+            results = service.submit_many([q for q, _ in batch])
+        except BaseException as e:  # engine bug — fail loudly, hang nobody
+            for _, fut in batch:
+                _resolve(fut, error=e)
+            return
+        for (_, fut), res in zip(batch, results):
+            if res.error is not None:
+                _resolve(fut, error=res.error)
+            else:
+                _resolve(fut, result=res)

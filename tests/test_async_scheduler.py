@@ -1,0 +1,326 @@
+"""Async submission tier: per-request futures, cross-caller batch
+formation, backpressure, drain-on-close, and the threaded stress test
+interleaving submissions with bucket-crossing table updates."""
+
+import threading
+import time
+from collections import Counter
+
+import jax
+import numpy as np
+import pytest
+
+from repro.data import make_tpch_db
+from repro.service import AdmissionError, QueryService
+from repro.tables.table import Table, bucket_capacity
+
+jax.config.update("jax_platform_name", "cpu")
+
+FIG1 = """
+SELECT MIN(s.s_acctbal), MAX(s.s_acctbal)
+FROM region r, nation n, supplier s, partsupp ps, part p
+WHERE r.r_regionkey = n.n_regionkey AND n.n_nationkey = s.s_nationkey
+  AND s.s_suppkey = ps.ps_suppkey AND ps.ps_partkey = p.p_partkey
+  AND r.r_name IN (2, 3) AND p.p_price > 1200.0
+"""
+_SUPP_DIMS = """FROM supplier s, nation n, region r
+WHERE s.s_nationkey = n.n_nationkey AND n.n_regionkey = r.r_regionkey
+  AND r.r_name IN (2, 3)"""
+_PART_DIMS = """FROM partsupp ps, part p
+WHERE ps.ps_partkey = p.p_partkey AND p.p_price > 1500.0"""
+# the benchmark's dashboard: two subplan-overlap fusion sets
+# ({supplier-dims family ∪ FIG1}, {partsupp-dims family})
+DASHBOARD = [
+    f"SELECT MIN(s.s_acctbal), MAX(s.s_acctbal) {_SUPP_DIMS}",
+    f"SELECT SUM(s.s_acctbal) {_SUPP_DIMS}",
+    f"SELECT COUNT(*) AS n, AVG(s.s_acctbal) AS avg {_SUPP_DIMS} "
+    "GROUP BY s.s_nationkey",
+    f"SELECT MEDIAN(s.s_acctbal) {_SUPP_DIMS}",
+    f"SELECT SUM(ps.ps_supplycost), COUNT(*) {_PART_DIMS}",
+    f"SELECT AVG(ps.ps_supplycost) AS avg_cost {_PART_DIMS} "
+    "GROUP BY ps.ps_suppkey",
+    FIG1,
+]
+# duplication-invariant queries (MIN/MAX only) for the stress test: the
+# updater grows tables by RESAMPLING existing rows, which never changes a
+# MIN/MAX answer — so every interleaving must match the serial baseline
+MINMAX_QUERIES = [
+    FIG1,
+    f"SELECT MIN(s.s_acctbal) {_SUPP_DIMS}",
+    """SELECT MIN(s.s_acctbal), MAX(s.s_acctbal)
+FROM supplier s, nation n, region r, partsupp ps
+WHERE s.s_nationkey = n.n_nationkey AND n.n_regionkey = r.r_regionkey
+  AND s.s_suppkey = ps.ps_suppkey AND r.r_name IN (2, 3)""",
+]
+
+
+def _assert_values_equal(a: dict, b: dict):
+    assert set(a) == set(b)
+    for k, va in a.items():
+        vb = b[k]
+        if k == "groups":
+            assert set(va) == set(vb)
+            for c in va:
+                np.testing.assert_array_equal(np.asarray(va[c]),
+                                              np.asarray(vb[c]))
+        else:
+            np.testing.assert_array_equal(np.asarray(va), np.asarray(vb))
+
+
+def test_async_single_caller_roundtrip():
+    db, schema = make_tpch_db(scale=30, seed=3)
+    svc = QueryService(db, schema)
+    try:
+        fut = svc.submit_async(FIG1)
+        res = fut.result(60)
+        assert res.error is None
+        _assert_values_equal(res.values, svc.submit(FIG1).values)
+        m = svc.metrics()
+        assert m["async_requests"] == 1
+        assert m["async_batches"] >= 1
+        assert m["queue_depth_peak"] >= 1
+        assert m["rejected"] == 0
+    finally:
+        svc.close()
+
+
+def test_async_cross_caller_batch_formation():
+    """N independent callers each submitting ONE query land in one
+    batching window and fuse like a single submit_many: fewer compiles
+    than requests/fingerprints, answers bitwise-identical to serial."""
+    db, schema = make_tpch_db(scale=30, seed=4)
+    threads_n = 8
+    work = [DASHBOARD[i % len(DASHBOARD)] for i in range(threads_n)]
+
+    serial_svc = QueryService(db, schema)
+    serial = [serial_svc.submit(sql) for sql in work]
+
+    svc = QueryService(db, schema, async_max_wait_ms=500,
+                       async_max_batch=64)
+    try:
+        barrier = threading.Barrier(threads_n)
+        futs: list = [None] * threads_n
+
+        def caller(i):
+            barrier.wait()
+            futs[i] = svc.submit_async(work[i])
+
+        workers = [threading.Thread(target=caller, args=(i,))
+                   for i in range(threads_n)]
+        for t in workers:
+            t.start()
+        for t in workers:
+            t.join()
+        results = [f.result(120) for f in futs]
+        for got, want in zip(results, serial):
+            assert got.error is None
+            _assert_values_equal(got.values, want.values)
+        m = svc.metrics()
+        assert m["async_requests"] == threads_n
+        assert m["async_batches"] >= 1
+        distinct = len(set(work))
+        assert m["fused_compiles"] < distinct
+        assert m["compiles"] < threads_n
+        assert m["fused_queries"] >= distinct  # cross-caller fusion happened
+    finally:
+        svc.close()
+
+
+def test_async_bad_batchmate_isolated():
+    """A malformed query in the same batching window fails only its own
+    future; co-batched valid requests still get answers."""
+    db, schema = make_tpch_db(scale=30, seed=5)
+    svc = QueryService(db, schema, async_max_wait_ms=500,
+                       async_max_batch=64)
+    try:
+        before = svc.metrics()["async_batches"]
+        good1 = svc.submit_async(FIG1)
+        bad = svc.submit_async("SELECT MIN(x.nope) FROM nowhere x")
+        good2 = svc.submit_async(DASHBOARD[1])
+        r1, r2 = good1.result(120), good2.result(120)
+        assert r1.error is None and r1.values
+        assert r2.error is None and r2.values
+        with pytest.raises(Exception, match="nowhere"):
+            bad.result(120)
+        m = svc.metrics()
+        # one window → one batch: the bad request really was co-batched
+        assert m["async_batches"] - before == 1
+        assert m["request_errors"] >= 1
+    finally:
+        svc.close()
+
+
+def test_async_backpressure_rejects_on_full_queue():
+    db, schema = make_tpch_db(scale=20, seed=6)
+    svc = QueryService(db, schema, async_max_queue=2, async_max_wait_ms=1)
+    entered, release = threading.Event(), threading.Event()
+    orig = svc.submit_many
+
+    def blocking(queries):
+        entered.set()
+        assert release.wait(60), "test orchestration stalled"
+        return orig(queries)
+
+    svc.submit_many = blocking
+    try:
+        inflight = svc.submit_async(FIG1)
+        assert entered.wait(60)          # batcher holds the first request
+        queued = [svc.submit_async(FIG1) for _ in range(2)]
+        with pytest.raises(AdmissionError, match="queue full"):
+            svc.submit_async(FIG1)
+        assert svc.metrics()["rejected"] == 1
+        assert svc.metrics()["queue_depth_peak"] == 2
+        release.set()
+        assert inflight.result(120).error is None
+        for f in queued:
+            assert f.result(120).error is None
+    finally:
+        release.set()
+        svc.close()
+
+
+def test_async_close_drains_pending_requests():
+    db, schema = make_tpch_db(scale=20, seed=7)
+    # a window far longer than the test: only close() can flush it
+    svc = QueryService(db, schema, async_max_wait_ms=60_000)
+    futs = [svc.submit_async(q) for q in (FIG1, DASHBOARD[1])]
+    svc.close(timeout=120)
+    for f in futs:
+        assert f.result(1).error is None
+    with pytest.raises(RuntimeError, match="closed"):
+        svc.submit_async(FIG1)
+    # sync serving still works after close
+    assert svc.submit(FIG1).values
+
+
+def test_dropped_service_is_collectable_without_close():
+    """Regression: the batcher thread holds the service only weakly (plus
+    a pin while requests are pending), so a dropped QueryService — tables,
+    caches, executables and all — is garbage-collected and its batcher
+    thread exits even when close() was never called."""
+    import gc
+    import weakref
+
+    db, schema = make_tpch_db(scale=20, seed=9)
+    svc = QueryService(db, schema)
+    assert svc.submit_async(FIG1).result(120).error is None
+    thread = svc._scheduler._thread
+    ref = weakref.ref(svc)
+    del svc
+    deadline = time.monotonic() + 10
+    while ref() is not None and time.monotonic() < deadline:
+        gc.collect()                # the batcher unpins just after serving
+        time.sleep(0.05)
+    assert ref() is None, "idle QueryService still pinned by its batcher"
+    thread.join(5)                  # heartbeat notices the dead weakref
+    assert not thread.is_alive()
+
+
+def _grow_cross_bucket(tab: Table, seed: int) -> Table:
+    """Resampled-row copy of `tab` grown one row past its shape bucket.
+    Resampling keeps every MIN/MAX answer identical."""
+    cap = tab.capacity
+    extra = bucket_capacity(cap) + 1 - cap
+    rng = np.random.default_rng(seed)
+    idx = rng.integers(0, cap, extra)
+    cols = {name: np.concatenate([np.asarray(col), np.asarray(col)[idx]])
+            for name, col in tab.columns.items()}
+    return Table.from_numpy(cols)
+
+
+@pytest.mark.slow
+def test_stress_submissions_race_bucket_crossing_updates():
+    """Threaded submit/submit_async interleaved with bucket-crossing
+    update_table calls: every answer must equal the serial baseline
+    bitwise, and no (cache key, bucket) may compile twice — the only
+    tolerated rebuilds are invalidated stale-bucket keys."""
+    db, schema = make_tpch_db(scale=40, seed=8)
+    serial_svc = QueryService(db, schema)
+    baseline = {sql: serial_svc.submit(sql).values for sql in MINMAX_QUERIES}
+
+    svc = QueryService(db, schema, async_max_wait_ms=5)
+    grow_rels = ("supplier", "partsupp")
+    old_buckets = {(rel, bucket_capacity(db[rel].capacity))
+                   for rel in grow_rels}
+
+    built: list = []
+    orig_gob = svc._get_or_build
+
+    def spy(cache, key, build, **kwargs):
+        def counted():
+            if cache is not svc.cache.padded:
+                # padded views legitimately re-pad after a table swap;
+                # the no-duplicate claim is about plans and compiles
+                built.append((id(cache), key))
+            return build()
+        return orig_gob(cache, key, counted, **kwargs)
+
+    svc._get_or_build = spy
+
+    errors: list = []
+    mismatches: list = []
+
+    def check(sql, res):
+        try:
+            _assert_values_equal(res.values, baseline[sql])
+        except AssertionError as e:
+            mismatches.append((sql, str(e)))
+
+    def sync_worker(offset):
+        try:
+            for i in range(6):
+                sql = MINMAX_QUERIES[(offset + i) % len(MINMAX_QUERIES)]
+                check(sql, svc.submit(sql))
+        except Exception as e:  # pragma: no cover
+            errors.append(e)
+
+    def async_worker(offset):
+        try:
+            for i in range(4):
+                sql = MINMAX_QUERIES[(offset + i) % len(MINMAX_QUERIES)]
+                check(sql, svc.submit_async(sql).result(120))
+        except Exception as e:  # pragma: no cover
+            errors.append(e)
+
+    def updater():
+        try:
+            # wait for the first compiled executable so the bucket
+            # crossing demonstrably invalidates cached programs, then
+            # race the remaining submissions
+            deadline = time.monotonic() + 60
+            while (svc.metrics()["compiles"] < 1
+                   and time.monotonic() < deadline):
+                time.sleep(0.005)
+            for j, rel in enumerate(grow_rels):
+                svc.update_table(rel, _grow_cross_bucket(db[rel], seed=j))
+                time.sleep(0.05)
+        except Exception as e:  # pragma: no cover
+            errors.append(e)
+
+    workers = ([threading.Thread(target=sync_worker, args=(i,))
+                for i in range(4)]
+               + [threading.Thread(target=async_worker, args=(i,))
+                  for i in range(2)]
+               + [threading.Thread(target=updater)])
+    for t in workers:
+        t.start()
+    for t in workers:
+        t.join()
+    svc.close()
+
+    assert not errors, errors
+    assert not mismatches, mismatches[:3]
+    m = svc.metrics()
+    assert m["request_errors"] == 0
+    assert m["bucket_invalidations"] >= 1   # the updates really crossed
+
+    # compile hygiene: duplicates are legal only for keys invalidated by
+    # the bucket crossings (a request that snapshotted just before the
+    # update rebuilds the stale key once); every live (key, bucket) pair
+    # compiled at most once
+    dupes = [key for key, n in Counter(built).items() if n > 1]
+    for _, key in dupes:
+        assert isinstance(key, tuple), f"plan rebuilt: {key!r}"
+        bucket = key[-1]
+        assert any((rel, cap) in old_buckets for rel, cap in bucket), \
+            f"duplicate compile for non-invalidated key {key!r}"

@@ -387,6 +387,139 @@ def test_concurrent_cold_submissions_compile_once():
     assert len(set(results)) == 1
 
 
+def test_submit_many_isolates_bad_requests(tpch_service):
+    """Regression: one malformed query (unknown relation, SQL syntax
+    error) must not abort its batch-mates — its error attaches to its own
+    QueryResult, everyone else gets answers."""
+    svc, _, _ = tpch_service
+    want = svc.submit(FIG1)
+    base = svc.metrics()
+    res = svc.submit_many([FIG1,
+                           "SELECT MIN(x.nope) FROM nowhere x",
+                           FIG1_RENAMED,
+                           "SELECT FROM WHERE"])
+    assert [r.error is None for r in res] == [True, False, True, False]
+    assert res[1].values == {} and res[3].values == {}
+    assert "nowhere" in str(res[1].error)
+    np.testing.assert_array_equal(
+        np.asarray(res[0].values["min(s.s_acctbal)"]),
+        np.asarray(want.values["min(s.s_acctbal)"]))
+    np.testing.assert_array_equal(
+        np.asarray(res[2].values["min(su.s_acctbal)"]),
+        np.asarray(want.values["min(s.s_acctbal)"]))
+    m = svc.metrics()
+    assert m["request_errors"] - base["request_errors"] == 2
+    # submit() re-raises the captured error for single-query callers
+    with pytest.raises(Exception, match="nowhere"):
+        svc.submit("SELECT MIN(x.nope) FROM nowhere x")
+
+
+def test_submit_many_empty_batch_counts_nothing(tpch_service):
+    """Regression: submit_many([]) used to increment the batches
+    counter."""
+    svc, _, _ = tpch_service
+    before = svc.metrics()
+    assert svc.submit_many([]) == []
+    assert svc.submit_many(iter([])) == []
+    after = svc.metrics()
+    assert after["batches"] == before["batches"]
+    assert after["requests"] == before["requests"]
+
+
+def test_submit_many_accepts_any_iterable(tpch_service):
+    """Regression: counting len(queries) up front broke generator
+    inputs."""
+    svc, _, _ = tpch_service
+    res = svc.submit_many(q for q in [FIG1])
+    assert res[0].error is None and res[0].values
+
+
+def test_padded_view_cache_bounded():
+    """Regression: the bucket-padded view cache was unbounded across
+    relations; it is now an LRU level of the plan cache."""
+    db, schema = make_tpch_db(scale=30, seed=5)
+    svc = QueryService(db, schema, padded_capacity=2)
+    first = svc.submit(FIG1)            # scans 5 relations
+    m = svc.metrics()
+    assert m["padded_relations"] <= 2
+    assert m["padded_evictions"] >= 3
+    # eviction is a cache concern only — answers are unaffected
+    again = svc.submit(FIG1)
+    np.testing.assert_array_equal(
+        np.asarray(first.values["min(s.s_acctbal)"]),
+        np.asarray(again.values["min(s.s_acctbal)"]))
+
+
+def test_metrics_and_updates_not_blocked_by_planning(monkeypatch):
+    """Regression: _plan_unit used to run the whole plan_query rewrite
+    pipeline while holding the service lock; metrics()/update_table were
+    stuck behind it.  Planning now builds behind an in-flight event like
+    a compile."""
+    import repro.service.engine as engine_mod
+    db, schema = make_tpch_db(scale=30, seed=13)
+    svc = QueryService(db, schema)
+    planning = threading.Event()
+    release = threading.Event()
+    real_plan = engine_mod.plan_query
+
+    def slow_plan(*args, **kwargs):
+        planning.set()
+        assert release.wait(30), "test orchestration stalled"
+        return real_plan(*args, **kwargs)
+
+    monkeypatch.setattr(engine_mod, "plan_query", slow_plan)
+    out: list = []
+    t = threading.Thread(target=lambda: out.append(svc.submit(FIG1)))
+    t.start()
+    try:
+        assert planning.wait(30)
+        t0 = time.perf_counter()
+        m = svc.metrics()                  # must not wait on planning
+        svc.update_table("region", Table.from_numpy(
+            {k: np.asarray(v) for k, v in db["region"].columns.items()}))
+        blocked_s = time.perf_counter() - t0
+    finally:
+        release.set()
+        t.join(60)
+    assert blocked_s < 1.0
+    assert m["requests"] == 1 and m["plan_misses"] == 0
+    assert out and "min(s.s_acctbal)" in out[0].values
+
+
+def test_metrics_and_updates_not_blocked_by_padding(monkeypatch):
+    """Regression: _snapshot used to run Table.pad_to (device work) while
+    holding the service lock; padding now happens outside it against an
+    immutable table snapshot."""
+    db, schema = make_tpch_db(scale=30, seed=14)
+    svc = QueryService(db, schema)
+    padding = threading.Event()
+    release = threading.Event()
+    real_pad = Table.pad_to
+
+    def slow_pad(self, cap):
+        padding.set()
+        assert release.wait(30), "test orchestration stalled"
+        return real_pad(self, cap)
+
+    monkeypatch.setattr(Table, "pad_to", slow_pad)
+    out: list = []
+    t = threading.Thread(target=lambda: out.append(svc.submit(FIG1)))
+    t.start()
+    try:
+        assert padding.wait(30)
+        t0 = time.perf_counter()
+        m = svc.metrics()                  # must not wait on pad_to
+        svc.update_table("region", Table.from_numpy(
+            {k: np.asarray(v) for k, v in db["region"].columns.items()}))
+        blocked_s = time.perf_counter() - t0
+    finally:
+        release.set()
+        t.join(60)
+    assert blocked_s < 1.0
+    assert m["requests"] == 1
+    assert out and "min(s.s_acctbal)" in out[0].values
+
+
 def test_compile_rejects_eager_only_options():
     db, schema = make_tpch_db(scale=10)
     q = parse_sql(FIG1, schema)
