@@ -22,19 +22,31 @@ measures the properties the serving tier exists for:
      fewer fused compiles than there are requests or even distinct
      fingerprints, with answers bitwise-identical to serial ``submit``
      calls — and a malformed query in the window fails only its own
-     future while every valid batch-mate is still answered.
+     future while every valid batch-mate is still answered;
+  7. RESTART warm start: two successive *processes* share a ``cache_dir``.
+     The first (cold) persists every plan and XLA executable; the second
+     (warm) must answer the same query mix with ZERO plan rebuilds
+     (``plan_builds == 0``, ``persist_hits`` == distinct fingerprints),
+     bitwise-identical answers, and — in the timed run — a lower
+     startup-to-answers wall-clock than the cold process.
 
     PYTHONPATH=src python benchmarks/serving_queries.py [--tiny] [--smoke]
 
-``--smoke`` runs only the fused-batching + mixed-shape + async scenarios
-on tiny tables and asserts cache/fusion/scheduler counters and answer
-identity (no timing gates) — what ``scripts/verify.sh --smoke`` runs so
-serving regressions fail CI fast.
+``--smoke`` runs only the fused-batching + mixed-shape + async + restart
+scenarios on tiny tables and asserts cache/fusion/scheduler/persistence
+counters and answer identity (no timing gates) — what
+``scripts/verify.sh --smoke`` runs so serving regressions fail CI fast.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
+import os
+import shutil
+import subprocess
+import sys
+import tempfile
 import threading
 import time
 
@@ -466,6 +478,103 @@ def check_async(ra: dict) -> list[str]:
     return fails
 
 
+# ---- restart scenario: cross-process warm start ----------------------------
+# Two successive processes over one cache_dir: the cold child plans,
+# compiles and persists; the warm child must serve the same mix from disk —
+# zero plan rebuilds, XLA binaries from the persistent compilation cache,
+# bitwise-identical answers.  Both phases run as real subprocesses so each
+# starts with an empty in-process JAX executable cache (the thing
+# persistence exists to survive).
+
+
+def _encode_values(values: dict) -> dict:
+    """QueryResult.values → a JSON-able, bitwise-comparable form."""
+    def enc(v):
+        a = np.asarray(v)
+        return {"dtype": str(a.dtype), "shape": list(a.shape),
+                "hex": a.tobytes().hex()}
+
+    out = {}
+    for k, v in values.items():
+        out[k] = {c: enc(a) for c, a in v.items()} if k == "groups" \
+            else enc(v)
+    return out
+
+
+def run_restart_child(cache_dir: str, scale: int, seed: int) -> dict:
+    """One serving process's life: start, build the db, serve the distinct
+    query mix once, report wall-clock + answers + metrics as JSON on
+    stdout (the parent compares cold vs warm)."""
+    t0 = time.perf_counter()
+    db, schema = make_tpch_db(scale=scale, seed=seed)
+    svc = QueryService(db, schema, cache_dir=cache_dir)
+    answers = {}
+    for name, sql in DISTINCT_QUERIES:
+        answers[name] = _encode_values(svc.submit(sql).values)
+    wall_s = time.perf_counter() - t0
+    m = svc.metrics()
+    return {"wall_s": wall_s, "answers": answers,
+            "plan_builds": m["plan_builds"],
+            "compiles": m["compiles"],
+            "compile_s_total": m["compile_s_total"],
+            "persist_hits": m["persist_hits"],
+            "persist_misses": m["persist_misses"],
+            "persist_writes": m["persist_writes"],
+            "persist_corrupt_skipped": m["persist_corrupt_skipped"]}
+
+
+def _spawn_restart_child(cache_dir: str, scale: int, seed: int) -> dict:
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = src + (os.pathsep + env["PYTHONPATH"]
+                               if env.get("PYTHONPATH") else "")
+    proc = subprocess.run(
+        [sys.executable, os.path.abspath(__file__), "--restart-child",
+         cache_dir, "--scale", str(scale), "--seed", str(seed)],
+        capture_output=True, text=True, env=env, timeout=600)
+    if proc.returncode != 0:
+        raise RuntimeError(f"restart child failed:\n{proc.stderr[-2000:]}")
+    # the JSON report is the last non-empty stdout line (jax may chat above)
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+def run_restart(scale: int = 1000, seed: int = 0,
+                cache_dir: str | None = None) -> dict:
+    own_dir = cache_dir is None
+    cache_dir = cache_dir or tempfile.mkdtemp(prefix="serving-warm-cache-")
+    try:
+        cold = _spawn_restart_child(cache_dir, scale, seed)
+        warm = _spawn_restart_child(cache_dir, scale, seed)
+    finally:
+        if own_dir:          # plans + XLA binaries: don't accrete in /tmp
+            shutil.rmtree(cache_dir, ignore_errors=True)
+    return {"queries": len(DISTINCT_QUERIES), "cache_dir": cache_dir,
+            "cold": cold, "warm": warm}
+
+
+def check_restart(rr: dict) -> list[str]:
+    """Gate the restart scenario's counters + identity; returns failures.
+    (The compile-time and wall-clock gates are applied by the timed run
+    only — smoke asserts no measured-time properties.)"""
+    fails = []
+    cold, warm = rr["cold"], rr["warm"]
+    n = rr["queries"]
+    if cold["persist_writes"] != n:
+        fails.append(f"cold process persisted {cold['persist_writes']} "
+                     f"plans, expected {n}")
+    if warm["plan_builds"] != 0:
+        fails.append(f"warm process rebuilt {warm['plan_builds']} plans — "
+                     "the persistent store is not warm-starting planning")
+    if warm["persist_hits"] != n:
+        fails.append(f"warm persist_hits={warm['persist_hits']} != {n} "
+                     "distinct fingerprints")
+    if warm["answers"] != cold["answers"]:
+        fails.append("warm-started answers are not bitwise-identical to "
+                     "the cold process")
+    return fails
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--tiny", action="store_true",
@@ -475,12 +584,22 @@ def main(argv=None):
                          "timing gates (what scripts/verify.sh runs)")
     ap.add_argument("--scale", type=int, default=None)
     ap.add_argument("--warm-iters", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--restart-child", metavar="CACHE_DIR", default=None,
+                    help="internal: run one restart-scenario serving "
+                         "process against CACHE_DIR and print its JSON "
+                         "report")
     args = ap.parse_args(argv)
     tiny = args.tiny or args.smoke
     scale = args.scale or (50 if tiny else 1000)
     warm_iters = args.warm_iters or (8 if tiny else 25)
 
     jax.config.update("jax_platform_name", "cpu")
+
+    if args.restart_child is not None:
+        print(json.dumps(run_restart_child(args.restart_child, scale,
+                                           args.seed)))
+        return 0
 
     rf = run_fused(scale=scale, repeats=2 if tiny else 3)
     m = rf["fused_metrics"]
@@ -533,6 +652,34 @@ def main(argv=None):
           f"rejected={ma['rejected']} "
           f"bad-query isolated={ra['bad_error'] is not None and ra['good_ok']}")
     fused_fails += check_async(ra)
+
+    rr = run_restart(scale=scale, seed=args.seed)
+    cold, warm = rr["cold"], rr["warm"]
+    print(f"restart warm start {rr['queries']} distinct queries, "
+          f"cache_dir={rr['cache_dir']}")
+    print(f"  cold process    {cold['wall_s'] * 1e3:>10.1f} ms "
+          f"(plan_builds={cold['plan_builds']}, "
+          f"compile_s={cold['compile_s_total'] * 1e3:.1f} ms, "
+          f"persist_writes={cold['persist_writes']})")
+    print(f"  warm process    {warm['wall_s'] * 1e3:>10.1f} ms "
+          f"(plan_builds={warm['plan_builds']}, "
+          f"compile_s={warm['compile_s_total'] * 1e3:.1f} ms, "
+          f"persist_hits={warm['persist_hits']})")
+    print(f"  identical={warm['answers'] == cold['answers']}")
+    fused_fails += check_restart(rr)
+    # timing gates (timed run only; --smoke asserts counters + identity):
+    # the persistent XLA cache must cut compile time, and the whole warm
+    # start must beat the cold one on wall-clock
+    if not args.smoke:
+        if warm["compile_s_total"] >= max(cold["compile_s_total"], 1e-9):
+            fused_fails.append(
+                f"warm compile_s_total {warm['compile_s_total']:.3f}s not "
+                f"below cold {cold['compile_s_total']:.3f}s — the "
+                "persistent XLA compilation cache is not being hit")
+        if warm["wall_s"] >= cold["wall_s"]:
+            fused_fails.append(
+                f"warm-start wall {warm['wall_s']:.2f}s not below cold "
+                f"{cold['wall_s']:.2f}s")
 
     if args.smoke:
         for f in fused_fails:

@@ -6,10 +6,16 @@
 #   scripts/verify.sh --smoke    # lint + serving-counter smoke only (fast):
 #                                # asserts the fused-dashboard counters,
 #                                # partial_fusions > 0 / subplan_saved > 0
-#                                # on the mixed-join-shape workload, AND the
+#                                # on the mixed-join-shape workload, the
 #                                # concurrent-callers scenario (async_batches
 #                                # > 0, fused compiles < async requests,
-#                                # malformed batch-mates isolated)
+#                                # malformed batch-mates isolated), AND the
+#                                # restart warm-start scenario (a second
+#                                # process over the same cache_dir: zero
+#                                # plan rebuilds, persist_hits == distinct
+#                                # fingerprints, bitwise-identical answers;
+#                                # the XLA-cache compile-time and wall-clock
+#                                # wins are gated by the timed run only)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -19,7 +25,7 @@ echo "== lint (ruff/pyflakes, or built-in fallback) =="
 python scripts/lint.py
 
 if [[ "${1:-}" == "--smoke" ]]; then
-  echo "== smoke: fused + mixed-join-shape + concurrent-caller counters =="
+  echo "== smoke: fused + mixed-shape + async + restart warm-start gates =="
   python benchmarks/serving_queries.py --smoke
   exit 0
 fi

@@ -15,12 +15,15 @@ from repro.core.oma import Classification, classify
 from repro.core.plan import (
     PhysicalPlan,
     PlanNode,
+    PlanNotSerialisable,
     PlanSegments,
     op_result_keys,
+    plan_from_payload,
+    plan_to_payload,
     rewrite_dag,
     segment_plan,
 )
-from repro.core.query import Agg, AggQuery, Atom
+from repro.core.query import Agg, AggQuery, Atom, selection_from_spec
 from repro.core.rewrite import plan_query
 from repro.core.sql import parse_sql, SqlError
 
@@ -34,11 +37,15 @@ __all__ = [
     "JoinTree",
     "PhysicalPlan",
     "PlanNode",
+    "PlanNotSerialisable",
     "PlanSegments",
     "op_result_keys",
+    "plan_from_payload",
     "plan_query",
+    "plan_to_payload",
     "rewrite_dag",
     "segment_plan",
+    "selection_from_spec",
     "shared_subplan_savings",
     "parse_sql",
     "SqlError",

@@ -37,7 +37,7 @@ import hashlib
 from typing import Callable
 
 from repro.core.hypergraph import JoinTree
-from repro.core.query import Agg
+from repro.core.query import Agg, Atom, selection_from_spec
 
 
 # ---------------------------------------------------------------------------
@@ -387,3 +387,142 @@ def segment_plan(plan: "PhysicalPlan") -> PlanSegments:
         if root_key is not None:
             prefix_key = _digest(root_key)
     return PlanSegments(prefix, suffix, prefix_key)
+
+
+# ---------------------------------------------------------------------------
+# Stable plan serialisation (cross-process plan-cache persistence)
+# ---------------------------------------------------------------------------
+#
+# A payload is plain JSON-able data: the DAG as a topologically ordered node
+# list with integer input edges, plus the query context (join tree, alias →
+# var → column maps).  Deserialisation re-runs the SAME node builders the
+# planner uses (``make_scan_node`` & co.), so every structural descriptor —
+# and therefore ``key()``, ``graph_key()`` and ``subplan_keys()`` — is
+# recomputed rather than trusted from disk: a reloaded plan is
+# content-identical to one freshly planned, which is what lets a warm
+# process fuse it against live plans.
+#
+# The one thing a payload cannot carry is an opaque selection callable;
+# plans whose scans attach a selection without a declarative ``spec`` raise
+# ``PlanNotSerialisable`` (their fingerprints are process-salted singletons
+# anyway, so persisting them would be meaningless).  Spec-carrying
+# selections are rebuilt from the spec via ``selection_from_spec`` — the
+# same builder the SQL front-end uses — so reloaded scans select
+# bitwise-identically.
+
+
+class PlanNotSerialisable(ValueError):
+    """The plan carries state that cannot survive a process boundary
+    (an opaque selection callable without a declarative spec)."""
+
+
+def _spec_to_jsonable(spec: tuple | None):
+    if spec is None:
+        return None
+    return [[op, col, list(val) if op == "in" else val]
+            for op, col, val in spec]
+
+
+def _spec_from_jsonable(spec) -> tuple | None:
+    if spec is None:
+        return None
+    return tuple((op, col, tuple(val) if op == "in" else val)
+                 for op, col, val in spec)
+
+
+def plan_to_payload(plan: "PhysicalPlan") -> dict:
+    """Serialise a plan into a JSON-able payload (see section comment).
+
+    Raises ``PlanNotSerialisable`` for plans with opaque selections."""
+    nodes = plan.nodes
+    index = {id(n): i for i, n in enumerate(nodes)}
+    entries = []
+    for n in nodes:
+        op = n.op
+        e: dict = {"inputs": [index[id(i)] for i in n.inputs]}
+        if isinstance(op, ScanOp):
+            if op.selection is not None and op.spec is None:
+                raise PlanNotSerialisable(
+                    f"scan of {op.rel!r} (alias {op.alias!r}) attaches an "
+                    "opaque selection callable with no declarative spec; "
+                    "it cannot be rebuilt in another process")
+            e.update(kind="scan", alias=op.alias, rel=op.rel,
+                     spec=_spec_to_jsonable(op.spec))
+        elif isinstance(op, SemiJoinOp):
+            e.update(kind="semi", parent=op.parent, child=op.child,
+                     on_vars=list(op.on_vars))
+        elif isinstance(op, FreqJoinOp):
+            e.update(kind="freq", parent=op.parent, child=op.child,
+                     on_vars=list(op.on_vars), pregroup=op.pregroup)
+        elif isinstance(op, MaterializeJoinOp):
+            e.update(kind="mat", parent=op.parent, child=op.child,
+                     on_vars=list(op.on_vars), regroup=op.regroup)
+        elif isinstance(op, FinalAggOp):
+            e.update(kind="agg", root=op.root, group_by=list(op.group_by),
+                     dedup=op.dedup,
+                     aggregates=[{"func": a.func, "var": a.var,
+                                  "distinct": a.distinct, "name": a.name}
+                                 for a in op.aggregates])
+        else:  # pragma: no cover
+            raise PlanNotSerialisable(f"unknown op {op!r}")
+        entries.append(e)
+    tree = plan.tree
+    return {
+        "mode": plan.mode,
+        "root": index[id(plan.root)],
+        "nodes": entries,
+        "tree": {
+            "root": tree.root,
+            "parent": dict(tree.parent),
+            "atoms": {alias: {"rel": a.rel, "vars": list(a.vars)}
+                      for alias, a in tree.atoms.items()},
+        },
+        "var_cols": {alias: dict(m) for alias, m in plan.var_cols.items()},
+    }
+
+
+def plan_from_payload(payload: dict) -> "PhysicalPlan":
+    """Rebuild a ``PhysicalPlan`` from ``plan_to_payload`` output.
+
+    Node structural descriptors (hence content keys) are recomputed by the
+    planner's own builders, never read from the payload."""
+    tdoc = payload["tree"]
+    atoms = {alias: Atom(a["rel"], alias, tuple(a["vars"]))
+             for alias, a in tdoc["atoms"].items()}
+    tree = JoinTree(tdoc["root"],
+                    {alias: p for alias, p in tdoc["parent"].items()},
+                    atoms)
+    var_cols = {alias: dict(m) for alias, m in payload["var_cols"].items()}
+
+    nodes: list[PlanNode] = []
+    for e in payload["nodes"]:
+        ins = tuple(nodes[i] for i in e["inputs"])
+        kind = e["kind"]
+        if kind == "scan":
+            spec = _spec_from_jsonable(e["spec"])
+            sel = selection_from_spec(spec) if spec is not None else None
+            op = ScanOp(e["alias"], e["rel"], sel, spec)
+            nodes.append(make_scan_node(op, atoms[e["alias"]]))
+        elif kind == "semi":
+            op = SemiJoinOp(e["parent"], e["child"], tuple(e["on_vars"]))
+            nodes.append(make_join_node(op, ins[0], ins[1], var_cols))
+        elif kind == "freq":
+            op = FreqJoinOp(e["parent"], e["child"], tuple(e["on_vars"]),
+                            e["pregroup"])
+            nodes.append(make_join_node(op, ins[0], ins[1], var_cols))
+        elif kind == "mat":
+            op = MaterializeJoinOp(e["parent"], e["child"],
+                                   tuple(e["on_vars"]), e["regroup"])
+            nodes.append(make_materialize_node(op, ins[0], ins[1]))
+        elif kind == "agg":
+            op = FinalAggOp(
+                e["root"], tuple(e["group_by"]),
+                tuple(Agg(a["func"], a["var"], distinct=a["distinct"],
+                          name=a["name"]) for a in e["aggregates"]),
+                e["dedup"])
+            nodes.append(make_final_agg_node(op, ins[0],
+                                             atoms.get(e["root"])))
+        else:
+            raise ValueError(f"unknown node kind {kind!r}")
+    return PhysicalPlan(payload["mode"], nodes[payload["root"]], tree,
+                        var_cols)

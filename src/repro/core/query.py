@@ -21,6 +21,37 @@ AGG_FUNCS = ("count", "sum", "avg", "min", "max", "median")
 SET_SAFE_FUNCS = ("min", "max")
 
 
+def selection_from_spec(spec) -> Callable:
+    """Compile a declarative selection spec — a tuple of ``(op, column,
+    literal)`` terms, AND-ed, with ``op="in"`` holding a tuple of literals —
+    into the predicate closure the executor applies at scan time.
+
+    This is the single builder shared by the SQL front-end (which derives
+    specs from WHERE terms) and plan deserialisation (which must rebuild
+    the *same* callable from a persisted spec so a reloaded plan selects
+    bitwise-identically to the plan that was stored)."""
+    terms = tuple((op, col, tuple(val) if op == "in" else val)
+                  for op, col, val in spec)
+
+    def pred(cols):
+        import jax.numpy as jnp
+        mask = None
+        for op, col, val in terms:
+            c = cols[col]
+            if op == "in":
+                m_ = jnp.zeros(c.shape, bool)
+                for v in val:
+                    m_ = m_ | (c == v)
+            else:
+                m_ = {"=": c == val, "!=": c != val,
+                      "<": c < val, ">": c > val,
+                      "<=": c <= val, ">=": c >= val}[op]
+            mask = m_ if mask is None else (mask & m_)
+        return mask
+
+    return pred
+
+
 @dataclasses.dataclass(frozen=True)
 class Atom:
     """One occurrence of a relation in the join; ``vars`` binds columns

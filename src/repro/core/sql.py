@@ -27,7 +27,7 @@ from __future__ import annotations
 
 import re
 
-from repro.core.query import Agg, AggQuery, Atom
+from repro.core.query import Agg, AggQuery, Atom, selection_from_spec
 from repro.tables.table import Schema
 
 _AGG_RE = re.compile(
@@ -154,25 +154,7 @@ def parse_sql(sql: str, schema: Schema) -> AggQuery:
     sel_specs = {}
     for alias, conds in selections.items():
         sel_specs[alias] = tuple(conds)
-
-        def make(conds):
-            def pred(cols):
-                import jax.numpy as jnp
-                mask = None
-                for op, col, val in conds:
-                    c = cols[col]
-                    if op == "in":
-                        m_ = jnp.zeros(c.shape, bool)
-                        for v in val:
-                            m_ = m_ | (c == v)
-                    else:
-                        m_ = {"=": c == val, "!=": c != val,
-                              "<": c < val, ">": c > val,
-                              "<=": c <= val, ">=": c >= val}[op]
-                    mask = m_ if mask is None else (mask & m_)
-                return mask
-            return pred
-        sel_fns[alias] = make(conds)
+        sel_fns[alias] = selection_from_spec(conds)
 
     # aggregates
     aggs = []

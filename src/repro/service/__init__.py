@@ -3,8 +3,9 @@
 Guarded aggregate plans are static-dataflow programs — compile once, serve
 many.  This package owns everything between "SQL arrives" and "compiled
 program runs": query fingerprinting (``fingerprint``), the multi-level
-plan cache (``plan_cache``), the concurrent micro-batching engine
-(``engine``), and the async cross-caller batch former (``scheduler``).
+plan cache (``plan_cache``), the persistent cross-process plan store
+(``plan_store``), the concurrent micro-batching engine (``engine``), and
+the async cross-caller batch former (``scheduler``).
 """
 
 from repro.service.engine import (
@@ -20,6 +21,12 @@ from repro.service.fingerprint import (
     prefix_fingerprint,
 )
 from repro.service.plan_cache import LRUCache, PlanCache
+from repro.service.plan_store import (
+    PlanStore,
+    enable_executable_cache,
+    schema_fingerprint,
+    store_fingerprint,
+)
 from repro.service.scheduler import AsyncScheduler
 
 __all__ = [
@@ -27,11 +34,15 @@ __all__ = [
     "AsyncScheduler",
     "CanonicalQuery",
     "canonicalize",
+    "enable_executable_cache",
     "fingerprint",
     "prefix_fingerprint",
     "LRUCache",
     "PlanCache",
+    "PlanStore",
     "QueryResult",
     "QueryService",
     "ServeStats",
+    "schema_fingerprint",
+    "store_fingerprint",
 ]

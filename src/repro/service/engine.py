@@ -67,6 +67,18 @@ outside it, coordinated by per-key in-flight events so concurrent cold
 requests for the same artefact build it once.  ``metrics()`` and
 ``update_table`` never wait behind planning, padding, a long compile, or
 an eager baseline run.
+
+Warm starts: ``QueryService(db, schema, cache_dir=...)`` persists every
+shareable plan to a ``PlanStore`` under ``cache_dir`` and points JAX's
+persistent compilation cache at ``cache_dir/xla`` — so a NEW process over
+the same schema replays known query structures with zero plan rebuilds
+(``plan_builds`` stays 0; the disk level answers, ``persist_hits``
+counting) and pulls previously compiled XLA binaries from disk instead of
+recompiling.  Plan lookup order is memory → disk → plan; disk failures of
+any kind (corrupt entries, read-only volumes) degrade to memory-only
+caching and never attach an error to a request.  ``export_cache`` /
+``import_cache`` move a warm cache between directories (e.g. to seed a
+fleet from one warmed pod).
 """
 
 from __future__ import annotations
@@ -91,6 +103,11 @@ from repro.core.rewrite import plan_query
 from repro.core.sql import parse_sql
 from repro.service.fingerprint import CanonicalQuery, canonicalize
 from repro.service.plan_cache import LRUCache, PlanCache, ShapeBucket
+from repro.service.plan_store import (
+    PlanStore,
+    enable_executable_cache,
+    store_fingerprint,
+)
 from repro.tables.table import Schema, Table, bucket_capacity
 
 
@@ -174,14 +191,25 @@ class QueryService:
                  fused_capacity: int = 128, padded_capacity: int = 64,
                  min_bucket: int = 8, async_max_batch: int = 64,
                  async_max_wait_ms: float = 2.0,
-                 async_max_queue: int = 1024):
+                 async_max_queue: int = 1024,
+                 cache_dir: str | None = None):
         self._db = dict(db)
         self.schema = schema
         self.mode = mode
         self.use_fkpk = use_fkpk
         self.min_bucket = min_bucket
+        store = None
+        if cache_dir is not None:
+            # the store identity covers schema AND planner configuration:
+            # plans are planner output, so a store warmed under another
+            # mode/use_fkpk must never serve this service
+            store = PlanStore(cache_dir,
+                              store_fingerprint(schema, mode, use_fkpk))
+            # executables warm-start through JAX's own persistent
+            # compilation cache (process-global; see plan_store docs)
+            enable_executable_cache(store.root / "xla")
         self.cache = PlanCache(plan_capacity, exec_capacity, fused_capacity,
-                               padded_capacity)
+                               padded_capacity, store=store)
         self._jit_executor = Executor(self._db, schema, freq_dtype, backend,
                                       interpret, dense_domain=dense_domain)
         # fingerprint → (eager, prefix_key, subplans, sig): the fusion
@@ -202,6 +230,8 @@ class QueryService:
         self._counters = {
             "requests": 0, "batches": 0, "dedup_saved": 0,
             "compiles": 0, "eager_requests": 0,
+            "plan_builds": 0,         # plan_query pipeline actually ran
+                                      # (0 in a fully warm-started process)
             "request_errors": 0,      # per-request captured failures
             "bucket_invalidations": 0,
             # cross-fingerprint fusion
@@ -363,6 +393,53 @@ class QueryService:
         if sch is not None:
             sch.close(timeout=timeout)
 
+    # ---- cache persistence ----------------------------------------------
+    @property
+    def plan_store(self) -> PlanStore | None:
+        """The persistent plan level (None without ``cache_dir``)."""
+        return self.cache.store
+
+    def export_cache(self, path) -> int:
+        """Write this service's plan cache to a fresh ``PlanStore`` at
+        `path`: every serialisable in-memory plan, plus any entries already
+        persisted in this service's own store that memory has evicted.
+        Returns the number of plans exported.  Use to seed warm starts on
+        other machines (ship the directory; ``cache_dir=path`` or
+        ``import_cache`` consumes it)."""
+        dest = PlanStore(path, store_fingerprint(self.schema, self.mode,
+                                                 self.use_fkpk))
+        with self._lock:
+            plans = self.cache.plans.items()
+        exported = set()
+        for fp, plan in plans:
+            if dest.save(fp, plan):          # skips opaque/unserialisable
+                exported.add(fp)
+        own = self.cache.store
+        if own is not None and own.root.resolve() != dest.root.resolve():
+            for fp, plan in own.load_all():
+                if fp not in exported and dest.save(fp, plan):
+                    exported.add(fp)
+        return len(exported)
+
+    def import_cache(self, path) -> int:
+        """Pre-warm the in-memory plan cache from a ``PlanStore`` at
+        `path` (and write the entries through to this service's own store,
+        when it has one).  Returns the number of plans imported.  Corrupt
+        or schema-mismatched entries are skipped, never raised."""
+        src = PlanStore(path, store_fingerprint(self.schema, self.mode,
+                                                self.use_fkpk))
+        n = 0
+        own = self.cache.store
+        write_through = own is not None \
+            and own.root.resolve() != src.root.resolve()
+        for fp, plan in src.load_all():
+            with self._lock:
+                self.cache.plans.put(fp, plan)
+            if write_through:
+                own.save(fp, plan)
+            n += 1
+        return n
+
     def _serve_batch(self, reqs: list[_Request]) -> dict[int, QueryResult]:
         """The batch pipeline: fingerprint-group → plan-unit →
         fusion-group → serve → per-request results, keyed by request id.
@@ -451,17 +528,33 @@ class QueryService:
         return _Request(canon, stats)
 
     def _plan_unit(self, group: list[_Request]) -> _Unit:
-        """L1 plan-cache lookup + fusion identity for one fingerprint
-        group.  Runs WITHOUT the service lock: the rewrite pipeline
-        (``plan_query``) executes behind a per-fingerprint in-flight event
-        like any other cache build, so a slow plan never blocks
-        ``metrics()``/``update_table`` or unrelated fingerprints."""
+        """Plan lookup for one fingerprint group: memory (plan-cache L1) →
+        disk (persistent ``PlanStore``, warm starts) → ``plan_query``.
+        Runs WITHOUT the service lock: both the disk load and the rewrite
+        pipeline execute behind a per-fingerprint in-flight event like any
+        other cache build, so a slow plan never blocks
+        ``metrics()``/``update_table`` or unrelated fingerprints.  Opaque
+        (unshareable) fingerprints are process-salted, so they bypass the
+        store entirely; freshly built shareable plans are written back
+        best-effort (a failed write degrades to memory-only caching)."""
         canon = group[0].canon
+
+        def build():
+            if canon.shareable:
+                plan = self.cache.load_persistent(canon.fingerprint)
+                if plan is not None:
+                    return plan
+            plan = plan_query(canon.query, self.schema, mode=self.mode,
+                              use_fkpk=self.use_fkpk)
+            with self._lock:
+                self._counters["plan_builds"] += 1
+            if canon.shareable:
+                self.cache.save_persistent(canon.fingerprint, plan)
+            return plan
+
         t0 = time.perf_counter()
         plan, plan_hit = self._get_or_build(
-            self.cache.plans, canon.fingerprint,
-            lambda: plan_query(canon.query, self.schema, mode=self.mode,
-                               use_fkpk=self.use_fkpk))
+            self.cache.plans, canon.fingerprint, build)
         plan_s = time.perf_counter() - t0
         with self._lock:
             seg = self._segments.get(canon.fingerprint)
@@ -700,8 +793,11 @@ class QueryService:
             out["compile_s_total"] = self._compile_s_total
             out["padded_relations"] = len(self.cache.padded)
             sch = self._scheduler
-        # the scheduler snapshots its own counters under its own lock —
-        # taken outside ours so the two never nest
+        # the scheduler and the persistent store snapshot their own
+        # counters under their own locks — taken outside ours so the locks
+        # never nest and the store's disk I/O (entry count) never stalls
+        # the hot path
         out.update(sch.metrics() if sch is not None
                    else dict(self._ASYNC_ZEROS))
+        out.update(self.cache.persist_metrics())
         return out

@@ -22,6 +22,14 @@ calls ``drop_padded`` and the engine re-validates the tag on every read.
 Padding is device work, so bounding this level (LRU) keeps a service that
 has touched many relations from pinning every padded copy forever.
 
+Below all the LRU levels sits an optional PERSISTENT level
+(``repro.service.plan_store.PlanStore``): a plan that misses the in-memory
+``plans`` LRU is looked up on disk before being re-planned, and freshly
+built plans are written back — so plan structures survive process
+restarts.  The store is strictly a lower level: it never affects LRU
+bookkeeping, its failures degrade to memory-only caching, and its
+``persist_*`` counters ride along in ``metrics()``.
+
 All levels are bounded LRU with hit/miss/eviction counters; ``metrics()``
 flattens them into the dict the serving engine exposes.
 """
@@ -91,6 +99,11 @@ class LRUCache:
         self.put(key, value)
         return value, False
 
+    def items(self) -> list[tuple[Hashable, Any]]:
+        """Snapshot of (key, value) pairs, LRU-oldest first — for cache
+        export; no counters touched."""
+        return list(self._d.items())
+
     def invalidate_if(self, pred: Callable[[Hashable], bool]) -> int:
         """Drop entries whose key matches; returns the count (not counted
         as evictions — these are correctness invalidations, not pressure)."""
@@ -118,14 +131,33 @@ class PlanCache:
       The source-table tag is the consistency check: readers compare it
       against their own database snapshot and ignore (then overwrite)
       entries padded from data that has since been swapped out.
+
+    Plus the optional persistent level under ``plans``: ``store`` (a
+    ``PlanStore`` or None), consulted via ``load_persistent`` /
+    ``save_persistent`` when the in-memory level misses.
     """
 
     def __init__(self, plan_capacity: int = 256, exec_capacity: int = 512,
-                 fused_capacity: int = 128, padded_capacity: int = 64):
+                 fused_capacity: int = 128, padded_capacity: int = 64,
+                 store=None):
         self.plans = LRUCache(plan_capacity)
         self.execs = LRUCache(exec_capacity)
         self.fused = LRUCache(fused_capacity)
         self.padded = LRUCache(padded_capacity)
+        self.store = store
+
+    def load_persistent(self, fingerprint: str):
+        """Disk-level plan lookup (None without a store / on any miss).
+        Corrupt entries are skipped and evicted by the store itself."""
+        if self.store is None:
+            return None
+        return self.store.load(fingerprint)
+
+    def save_persistent(self, fingerprint: str, plan) -> bool:
+        """Best-effort disk write-back of a freshly built plan."""
+        if self.store is None:
+            return False
+        return self.store.save(fingerprint, plan)
 
     # single source of the executable-cache key shapes: the serving engine
     # accesses the LRUs directly (to keep builds outside its lock) but
@@ -161,9 +193,20 @@ class PlanCache:
         self.padded.invalidate_if(lambda k: k == rel)
 
     def metrics(self) -> dict[str, int]:
+        """The LRU levels' counters.  The persistent level reports via
+        ``persist_metrics()`` — kept separate because it touches the disk
+        (entry count) and synchronises on the store's own lock, so callers
+        holding a hot-path lock (the serving engine) can collect it
+        outside."""
         out = {}
         for level, cache in (("plan", self.plans), ("exec", self.execs),
                              ("fused", self.fused), ("padded", self.padded)):
             for k, v in cache.counters().items():
                 out[f"{level}_{k}"] = v
         return out
+
+    def persist_metrics(self) -> dict[str, int]:
+        from repro.service.plan_store import PERSIST_ZEROS
+
+        return (self.store.metrics() if self.store is not None
+                else dict(PERSIST_ZEROS))
