@@ -1,0 +1,208 @@
+"""Benchmark recorder: one sink for the CSV harness contract AND the
+schema-versioned ``BENCH_*.json`` perf-trajectory files.
+
+Every benchmark section routes its rows through a ``Recorder``:
+
+* ``row(name, us, derived)`` prints the ``name,us_per_call,derived`` CSV
+  line the harness scrapes (NaN ``us`` prints as ``nan`` — a row that
+  carries no timing, e.g. a skipped section, still satisfies the
+  contract), and
+* with ``--record``, the same rows — plus latency-histogram snapshots
+  from ``QueryService.metrics_v2()`` and a flat metrics dict — are
+  written as a schema-versioned JSON document, so successive runs leave
+  a machine-readable speed trajectory that future re-anchors can diff
+  (the ROADMAP's autotuning item needs exactly this history).
+
+Document schema (``bench_schema_version`` 1)::
+
+    {
+      "bench_schema_version": 1,
+      "benchmark": "serving",            # which harness wrote it
+      "created_unix": 1754700000.0,
+      "meta": {...},                     # freeform: scale, iters, ...
+      "rows": [                          # the CSV rows, verbatim
+        {"section": "...", "name": "...",
+         "us_per_call": 12.3 | null,     # null == NaN (no timing)
+         "derived": "..."}
+      ],
+      "histograms": {                    # per-stage latency snapshots
+        "run": {"count": n, "sum_s": s, "max_s": m,
+                "p50_s": ..., "p95_s": ..., "p99_s": ...,
+                "buckets": [[upper_bound_s | null, count], ...]}
+      },
+      "metrics": {...}                   # flat counter snapshot
+    }
+
+``validate_bench(doc)`` checks a document against this schema and
+returns a list of problems (empty == valid);
+``python -m benchmarks.recorder FILE`` runs it from the command line
+(wired into ``scripts/verify.sh``'s smoke).
+"""
+
+from __future__ import annotations
+
+import json
+import math
+import sys
+import time
+
+BENCH_SCHEMA_VERSION = 1
+_PCT_KEYS = ("p50_s", "p95_s", "p99_s")
+
+
+class Recorder:
+    """CSV printer + optional JSON trajectory writer (one per harness
+    run).  ``path=None`` prints only — the no-``--record`` behaviour."""
+
+    def __init__(self, benchmark: str, path=None):
+        self.benchmark = benchmark
+        self.path = path
+        self._section = ""
+        self.rows: list[dict] = []
+        self.histograms: dict[str, dict] = {}
+        self.metrics: dict = {}
+        self.meta: dict = {}
+
+    def section(self, title: str) -> None:
+        print(f"\n### {title}", flush=True)
+        self._section = title
+
+    def row(self, name: str, us: float, derived: str = "") -> None:
+        """One ``name,us_per_call,derived`` CSV row.  ``us`` may be NaN
+        for rows with no timing (prints ``nan``, records ``null``)."""
+        us = float(us)
+        print(f"{name},{us:.1f},{derived}")
+        self.rows.append({
+            "section": self._section,
+            "name": name,
+            "us_per_call": None if math.isnan(us) else us,
+            "derived": str(derived),
+        })
+
+    def note(self, text: str) -> None:
+        """A non-row comment line (prefixed so harness scrapers skip it)."""
+        print(f"# {text}")
+
+    def add_histograms(self, histograms: dict) -> None:
+        """Merge per-stage histogram snapshots (the ``histograms`` half
+        of ``QueryService.metrics_v2()``)."""
+        self.histograms.update(histograms)
+
+    def add_metrics(self, metrics: dict) -> None:
+        self.metrics.update(metrics)
+
+    def add_meta(self, **kv) -> None:
+        self.meta.update(kv)
+
+    def document(self) -> dict:
+        return {
+            "bench_schema_version": BENCH_SCHEMA_VERSION,
+            "benchmark": self.benchmark,
+            "created_unix": time.time(),
+            "meta": self.meta,
+            "rows": self.rows,
+            "histograms": self.histograms,
+            "metrics": self.metrics,
+        }
+
+    def finish(self) -> dict | None:
+        """Write the trajectory file (when recording) and return the
+        document.  Refuses to write an invalid document — a schema bug
+        fails the benchmark run, not the later reader."""
+        if self.path is None:
+            return None
+        doc = self.document()
+        problems = validate_bench(doc)
+        if problems:
+            raise ValueError("recorder produced an invalid document: "
+                             + "; ".join(problems))
+        with open(self.path, "w") as f:
+            json.dump(doc, f, indent=1, default=float)
+        print(f"# recorded {len(self.rows)} rows + "
+              f"{len(self.histograms)} histograms -> {self.path}")
+        return doc
+
+
+def validate_bench(doc) -> list[str]:
+    """Validate a BENCH_*.json document; returns problems (empty = OK)."""
+    probs: list[str] = []
+    if not isinstance(doc, dict):
+        return ["document is not a JSON object"]
+    if doc.get("bench_schema_version") != BENCH_SCHEMA_VERSION:
+        probs.append(f"bench_schema_version "
+                     f"{doc.get('bench_schema_version')!r} != "
+                     f"{BENCH_SCHEMA_VERSION}")
+    if not isinstance(doc.get("benchmark"), str) or not doc.get("benchmark"):
+        probs.append("missing/empty 'benchmark' name")
+    if not isinstance(doc.get("created_unix"), (int, float)):
+        probs.append("'created_unix' is not a number")
+    rows = doc.get("rows")
+    if not isinstance(rows, list) or not rows:
+        probs.append("'rows' missing or empty")
+        rows = []
+    for i, r in enumerate(rows):
+        if not isinstance(r, dict):
+            probs.append(f"rows[{i}] is not an object")
+            continue
+        if not isinstance(r.get("name"), str) or not r.get("name"):
+            probs.append(f"rows[{i}] missing 'name'")
+        us = r.get("us_per_call", "absent")
+        if us == "absent":
+            probs.append(f"rows[{i}] missing 'us_per_call'")
+        elif us is not None and (not isinstance(us, (int, float))
+                                 or isinstance(us, bool)
+                                 or math.isnan(float(us))):
+            probs.append(f"rows[{i}].us_per_call must be a number or "
+                         f"null, got {us!r}")
+        if "derived" not in r or not isinstance(r["derived"], str):
+            probs.append(f"rows[{i}] missing string 'derived'")
+    hists = doc.get("histograms")
+    if not isinstance(hists, dict):
+        probs.append("'histograms' is not an object")
+        hists = {}
+    for stage, h in hists.items():
+        if not isinstance(h, dict):
+            probs.append(f"histograms[{stage!r}] is not an object")
+            continue
+        for k in ("count", "sum_s", "max_s") + _PCT_KEYS:
+            if not isinstance(h.get(k), (int, float)) \
+                    or isinstance(h.get(k), bool):
+                probs.append(f"histograms[{stage!r}].{k} missing or "
+                             "non-numeric")
+        if not (isinstance(h.get("count"), int) and h["count"] >= 0):
+            probs.append(f"histograms[{stage!r}].count must be an int "
+                         ">= 0")
+    if not isinstance(doc.get("metrics"), dict):
+        probs.append("'metrics' is not an object")
+    if not isinstance(doc.get("meta"), dict):
+        probs.append("'meta' is not an object")
+    return probs
+
+
+def main(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if len(argv) != 1:
+        print("usage: python -m benchmarks.recorder BENCH_file.json",
+              file=sys.stderr)
+        return 2
+    try:
+        with open(argv[0]) as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"INVALID {argv[0]}: unreadable ({e})", file=sys.stderr)
+        return 1
+    problems = validate_bench(doc)
+    if problems:
+        for p in problems:
+            print(f"INVALID {argv[0]}: {p}", file=sys.stderr)
+        return 1
+    n_pct = sum(1 for h in doc["histograms"].values()
+                if all(k in h for k in _PCT_KEYS))
+    print(f"OK {argv[0]}: benchmark={doc['benchmark']} "
+          f"rows={len(doc['rows'])} histograms={len(doc['histograms'])} "
+          f"(with p50/p95/p99: {n_pct})")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -3,8 +3,14 @@
     PYTHONPATH=src python -m benchmarks.run             # engine benchmarks
     PYTHONPATH=src python -m benchmarks.run --full      # + roofline/dryrun
                                                           (subprocess, slow)
+    PYTHONPATH=src python -m benchmarks.run --record    # + BENCH_run.json
 
-Prints ``name,us_per_call,derived`` CSV rows per the harness contract.
+EVERY section emits ``name,us_per_call,derived`` CSV rows through one
+``benchmarks.recorder.Recorder`` sink — including the roofline/dry-run
+summaries when their artifact files are absent (a ``*.skipped`` row with
+``us_per_call=nan``), so the harness contract holds in ``--fast`` runs
+too.  ``--record`` additionally writes the rows as a schema-versioned
+``BENCH_run.json`` trajectory.
 """
 
 from __future__ import annotations
@@ -16,14 +22,6 @@ import subprocess
 import sys
 
 
-def _csv(name, us, derived=""):
-    print(f"{name},{us:.1f},{derived}")
-
-
-def section(title):
-    print(f"\n### {title}", flush=True)
-
-
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true",
@@ -31,68 +29,78 @@ def main() -> None:
                          "(hours of compile on 1 CPU core)")
     ap.add_argument("--fast", action="store_true",
                     help="smaller datasets (CI-sized)")
+    ap.add_argument("--record", nargs="?", const="BENCH_run.json",
+                    default=None, metavar="PATH",
+                    help="write the rows as a schema-versioned JSON "
+                         "trajectory (default PATH: BENCH_run.json)")
     args = ap.parse_args()
 
     from benchmarks import analytics, graph_counting, materialisation
+    from benchmarks.recorder import Recorder
 
-    section("Table 1 — SNAP-like graph counting (Ref / Opt / Opt+)")
+    rec = Recorder("run", path=args.record)
+    rec.add_meta(fast=args.fast, full=args.full)
+
+    rec.section("Table 1 — SNAP-like graph counting (Ref / Opt / Opt+)")
     if args.fast:
         rows = graph_counting.run(n_nodes=2_000, n_edges=20_000, repeats=1)
     else:
         rows = graph_counting.main()
     for r in rows:
-        _csv(f"graph.{r['query']}.opt_plus", r["opt_plus_s"] * 1e6,
-             f"count={r['count']:.3e}")
+        rec.row(f"graph.{r['query']}.opt_plus", r["opt_plus_s"] * 1e6,
+                f"count={r['count']:.3e}")
         if r.get("ref_s"):
-            _csv(f"graph.{r['query']}.ref", r["ref_s"] * 1e6,
-                 f"speedup={r['ref_s'] / r['opt_plus_s']:.2f}x")
+            rec.row(f"graph.{r['query']}.ref", r["ref_s"] * 1e6,
+                    f"speedup={r['ref_s'] / r['opt_plus_s']:.2f}x")
         else:
-            _csv(f"graph.{r['query']}.ref", float("nan"), "X(oom-guard)")
+            rec.row(f"graph.{r['query']}.ref", float("nan"), "X(oom-guard)")
 
-    section("Table 2 — analytic benchmarks (TPC-H V.1, STATS-CEB-like)")
+    rec.section("Table 2 — analytic benchmarks (TPC-H V.1, STATS-CEB-like)")
     rows = analytics.main() if not args.fast else analytics.run(
         tpch_scale=500, repeats=1)
     for r in rows:
-        _csv(f"analytics.{r['query'].replace(' ', '_')}",
-             r["opt_plus_s"] * 1e6,
-             f"plan={r['plan']};ref="
-             f"{'X' if r.get('ref_s') is None else round(r['ref_s'], 4)}")
+        rec.row(f"analytics.{r['query'].replace(' ', '_')}",
+                r["opt_plus_s"] * 1e6,
+                f"plan={r['plan']};ref="
+                f"{'X' if r.get('ref_s') is None else round(r['ref_s'], 4)}")
 
-    section("Fig. 6 — peak materialised tuples per plan class")
+    rec.section("Fig. 6 — peak materialised tuples per plan class")
     rows = materialisation.main()
     for r in rows:
-        _csv(f"materialisation.{r['query']}", 0.0,
-             f"ref={r['ref']};opt={r['opt']};opt_plus={r['opt_plus']};"
-             f"base_max={r['base_max']}")
+        rec.row(f"materialisation.{r['query']}", 0.0,
+                f"ref={r['ref']};opt={r['opt']};opt_plus={r['opt_plus']};"
+                f"base_max={r['base_max']}")
 
     # roofline & dry-run: read cached artifacts if present (full runs are
     # launched explicitly — they recompile the 512-device matrix)
     root = pathlib.Path(__file__).resolve().parent.parent
     if args.full:
-        section("Dry-run matrix (recomputing)")
+        rec.section("Dry-run matrix (recomputing)")
         subprocess.run([sys.executable, "-m", "repro.launch.dryrun",
                         "--mesh", "both",
                         "--out", str(root / "dryrun_results.json")],
                        check=True)
-        section("Roofline matrix (recomputing)")
+        rec.section("Roofline matrix (recomputing)")
         subprocess.run([sys.executable, "-m", "benchmarks.roofline",
                         "--out", str(root / "roofline_results.json")],
                        check=True)
 
-    section("Roofline summary (from roofline_results.json)")
+    rec.section("Roofline summary (from roofline_results.json)")
     rf = root / "roofline_results.json"
     if rf.exists():
         rows = json.loads(rf.read_text())["rows"]
         for r in rows:
-            _csv(f"roofline.{r['arch']}.{r['shape']}",
-                 r["step_time_bound_s"] * 1e6,
-                 f"bottleneck={r['bottleneck']};"
-                 f"frac={r['roofline_fraction']:.3f};"
-                 f"useful={r['useful_flops_ratio']:.2f}")
+            rec.row(f"roofline.{r['arch']}.{r['shape']}",
+                    r["step_time_bound_s"] * 1e6,
+                    f"bottleneck={r['bottleneck']};"
+                    f"frac={r['roofline_fraction']:.3f};"
+                    f"useful={r['useful_flops_ratio']:.2f}")
     else:
-        print("(roofline_results.json not found — run benchmarks.roofline)")
+        # contract-shaped even when skipped: a nan-timed row, not prose
+        rec.row("roofline.skipped", float("nan"),
+                "roofline_results.json not found; run benchmarks.roofline")
 
-    section("Dry-run summary (from dryrun_results.json)")
+    rec.section("Dry-run summary (from dryrun_results.json)")
     df = root / "dryrun_results.json"
     if df.exists():
         res = json.loads(df.read_text())
@@ -102,12 +110,15 @@ def main() -> None:
             mem = r["memory"]
             tot = sum(v for v in (mem["argument_bytes"],
                                   mem["temp_bytes"]) if v)
-            _csv(f"dryrun.{r['arch']}.{r['shape']}.{r['mesh']}",
-                 r["compile_s"] * 1e6,
-                 f"flops={r['flops']:.3e};mem_GiB={tot / 2**30:.2f}")
-        print(f"# dry-run: {ok} cells OK, {bad} failed")
+            rec.row(f"dryrun.{r['arch']}.{r['shape']}.{r['mesh']}",
+                    r["compile_s"] * 1e6,
+                    f"flops={r['flops']:.3e};mem_GiB={tot / 2**30:.2f}")
+        rec.note(f"dry-run: {ok} cells OK, {bad} failed")
     else:
-        print("(dryrun_results.json not found — run repro.launch.dryrun)")
+        rec.row("dryrun.skipped", float("nan"),
+                "dryrun_results.json not found; run repro.launch.dryrun")
+
+    rec.finish()
 
 
 if __name__ == "__main__":

@@ -32,10 +32,20 @@ measures the properties the serving tier exists for:
 
     PYTHONPATH=src python benchmarks/serving_queries.py [--tiny] [--smoke]
 
+  8. OBSERVABILITY overhead: the same warm query mix through a traced
+     and an untraced (``tracing=False``) service must produce bitwise
+     identical answers, and tracing's warm hot-path cost must stay ≤ 3%
+     (plus a small absolute floor, so micro-benchmark noise on tiny
+     tables cannot flake the gate); the traced service's per-stage
+     latency histograms (p50/p95/p99) feed the ``--record`` trajectory.
+
 ``--smoke`` runs only the fused-batching + mixed-shape + async + restart
-scenarios on tiny tables and asserts cache/fusion/scheduler/persistence
-counters and answer identity (no timing gates) — what
-``scripts/verify.sh --smoke`` runs so serving regressions fail CI fast.
++ observability scenarios on tiny tables and asserts cache/fusion/
+scheduler/persistence counters and answer identity (plus the tracing
+overhead gate) — what ``scripts/verify.sh --smoke`` runs so serving
+regressions fail CI fast.  ``--record [PATH]`` writes a schema-versioned
+``BENCH_serving.json`` (rows + per-stage histogram snapshots + counters;
+validated by ``python -m benchmarks.recorder``).
 """
 
 from __future__ import annotations
@@ -52,6 +62,10 @@ import time
 
 import jax
 import numpy as np
+
+# run both as `python benchmarks/serving_queries.py` (script dir on
+# sys.path, repo root not) and as `python -m benchmarks.serving_queries`
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 from repro.data import make_tpch_db
 from repro.service import QueryService
@@ -478,6 +492,73 @@ def check_async(ra: dict) -> list[str]:
     return fails
 
 
+# ---- observability overhead: traced vs untraced ----------------------------
+TRACING_OVERHEAD_FRAC = 0.03     # the ≤ 3% warm hot-path budget
+TRACING_OVERHEAD_FLOOR_S = 3e-4  # absolute noise floor for tiny tables
+
+
+def run_overhead(scale: int = 1000, iters: int = 30, seed: int = 0):
+    """Warm hot-path cost of tracing: one traced and one untraced
+    service, same query mix, interleaved measurement rounds (drift in
+    either direction hits both populations equally).  Returns identity,
+    medians, and the traced service's metrics_v2 snapshot — the
+    per-stage histograms ``--record`` persists."""
+    db, schema = make_tpch_db(scale=scale, seed=seed)
+    svc_traced = QueryService(db, schema, tracing=True)
+    svc_plain = QueryService(db, schema, tracing=False)
+    sqls = [sql for _, sql in DISTINCT_QUERIES]
+    answers = {}
+    for svc in (svc_traced, svc_plain):          # cold pass: warm caches
+        answers[id(svc)] = [svc.submit(sql).values for sql in sqls]
+    identical = all(
+        _values_equal(a, b) for a, b in zip(answers[id(svc_traced)],
+                                            answers[id(svc_plain)]))
+
+    lat = {id(svc_traced): [], id(svc_plain): []}
+    for _ in range(iters):
+        for svc in (svc_plain, svc_traced):      # interleaved rounds
+            for sql in sqls:
+                t0 = time.perf_counter()
+                svc.submit(sql)
+                lat[id(svc)].append(time.perf_counter() - t0)
+    traced_s = float(np.median(lat[id(svc_traced)]))
+    plain_s = float(np.median(lat[id(svc_plain)]))
+    v2 = svc_traced.metrics_v2()
+    return {
+        "iters": iters,
+        "identical": identical,
+        "traced_median_s": traced_s,
+        "untraced_median_s": plain_s,
+        "overhead_frac": traced_s / plain_s - 1.0 if plain_s > 0 else 0.0,
+        "histograms": v2["histograms"],
+        "metrics": svc_traced.metrics(),
+    }
+
+
+def check_overhead(ro: dict) -> list[str]:
+    """Gate the observability scenario: identity always; the overhead
+    budget with an absolute floor so µs-level timer noise on tiny
+    tables cannot flake CI."""
+    fails = []
+    if not ro["identical"]:
+        fails.append("traced answers differ from tracing=False answers")
+    budget = (ro["untraced_median_s"] * (1.0 + TRACING_OVERHEAD_FRAC)
+              + TRACING_OVERHEAD_FLOOR_S)
+    if ro["traced_median_s"] > budget:
+        fails.append(
+            f"tracing overhead: warm median {ro['traced_median_s'] * 1e3:.3f}"
+            f" ms traced vs {ro['untraced_median_s'] * 1e3:.3f} ms untraced "
+            f"(> {TRACING_OVERHEAD_FRAC:.0%} + "
+            f"{TRACING_OVERHEAD_FLOOR_S * 1e3:.1f} ms floor)")
+    for stage in ("parse", "plan", "pad", "compile", "run", "request"):
+        h = ro["histograms"].get(stage)
+        if h is None or h["count"] < 1:
+            fails.append(f"traced service recorded no '{stage}' histogram")
+        elif not all(k in h for k in ("p50_s", "p95_s", "p99_s")):
+            fails.append(f"'{stage}' histogram lacks p50/p95/p99")
+    return fails
+
+
 # ---- restart scenario: cross-process warm start ----------------------------
 # Two successive processes over one cache_dir: the cold child plans,
 # compiles and persists; the warm child must serve the same mix from disk —
@@ -589,6 +670,11 @@ def main(argv=None):
                     help="internal: run one restart-scenario serving "
                          "process against CACHE_DIR and print its JSON "
                          "report")
+    ap.add_argument("--record", nargs="?", const="BENCH_serving.json",
+                    default=None, metavar="PATH",
+                    help="write a schema-versioned perf trajectory "
+                         "(rows + per-stage latency histograms; default "
+                         "PATH: BENCH_serving.json)")
     args = ap.parse_args(argv)
     tiny = args.tiny or args.smoke
     scale = args.scale or (50 if tiny else 1000)
@@ -600,6 +686,10 @@ def main(argv=None):
         print(json.dumps(run_restart_child(args.restart_child, scale,
                                            args.seed)))
         return 0
+
+    from benchmarks.recorder import Recorder
+    rec = Recorder("serving", path=args.record)
+    rec.add_meta(scale=scale, tiny=tiny, smoke=args.smoke, seed=args.seed)
 
     rf = run_fused(scale=scale, repeats=2 if tiny else 3)
     m = rf["fused_metrics"]
@@ -615,6 +705,12 @@ def main(argv=None):
           f"partial_fusions={m['partial_fusions']} "
           f"subplan_saved={m['subplan_saved']} "
           f"fused cache {m['fused_hits']}/{m['fused_hits'] + m['fused_misses']} hit")
+    per_q = rf["queries"] * rf["repeats"]
+    rec.row("serving.fused.individual", rf["solo_s"] / per_q * 1e6,
+            f"compiles={rf['solo_compiles']}")
+    rec.row("serving.fused.fused", rf["fused_s"] / per_q * 1e6,
+            f"compiles={rf['fused_compiles']};"
+            f"subplan_saved={m['subplan_saved']}")
     fused_fails = check_fused(rf)
     if not args.smoke and rf["fused_s"] >= rf["solo_s"]:
         fused_fails.append(f"fused wall {rf['fused_s']:.3f}s not below "
@@ -632,6 +728,12 @@ def main(argv=None):
     print(f"  identical={rm['identical']} "
           f"partial_fusions={mm['partial_fusions']} "
           f"subplan_saved={mm['subplan_saved']}")
+    per_q = rm["queries"] * rm["repeats"]
+    rec.row("serving.mixed.individual", rm["solo_s"] / per_q * 1e6,
+            f"compiles={rm['solo_compiles']}")
+    rec.row("serving.mixed.fused", rm["fused_s"] / per_q * 1e6,
+            f"compiles={rm['fused_compiles']};"
+            f"partial_fusions={mm['partial_fusions']}")
     fused_fails += check_mixed(rm)
     if not args.smoke and rm["fused_s"] >= rm["solo_s"]:
         fused_fails.append(f"mixed-shape fused wall {rm['fused_s']:.3f}s "
@@ -651,6 +753,11 @@ def main(argv=None):
           f"queue_depth_peak={ma['queue_depth_peak']} "
           f"rejected={ma['rejected']} "
           f"bad-query isolated={ra['bad_error'] is not None and ra['good_ok']}")
+    rec.row("serving.async.serial", ra["serial_s"] / ra["threads"] * 1e6,
+            f"compiles={ra['serial_compiles']}")
+    rec.row("serving.async.batched", ra["async_s"] / ra["threads"] * 1e6,
+            f"compiles={ma['compiles']};batches={ma['async_batches']};"
+            f"queue_depth_peak={ma['queue_depth_peak']}")
     fused_fails += check_async(ra)
 
     rr = run_restart(scale=scale, seed=args.seed)
@@ -666,6 +773,12 @@ def main(argv=None):
           f"compile_s={warm['compile_s_total'] * 1e3:.1f} ms, "
           f"persist_hits={warm['persist_hits']})")
     print(f"  identical={warm['answers'] == cold['answers']}")
+    rec.row("serving.restart.cold", cold["wall_s"] * 1e6,
+            f"plan_builds={cold['plan_builds']};"
+            f"persist_writes={cold['persist_writes']}")
+    rec.row("serving.restart.warm", warm["wall_s"] * 1e6,
+            f"plan_builds={warm['plan_builds']};"
+            f"persist_hits={warm['persist_hits']}")
     fused_fails += check_restart(rr)
     # timing gates (timed run only; --smoke asserts counters + identity):
     # the persistent XLA cache must cut compile time, and the whole warm
@@ -681,7 +794,23 @@ def main(argv=None):
                 f"warm-start wall {warm['wall_s']:.2f}s not below cold "
                 f"{cold['wall_s']:.2f}s")
 
+    ro = run_overhead(scale=scale, iters=20 if tiny else 30,
+                      seed=args.seed)
+    print(f"tracing overhead  warm median "
+          f"{ro['traced_median_s'] * 1e3:.3f} ms traced vs "
+          f"{ro['untraced_median_s'] * 1e3:.3f} ms untraced "
+          f"({ro['overhead_frac']:+.1%}), identical={ro['identical']}, "
+          f"{len(ro['histograms'])} stage histograms")
+    rec.row("serving.tracing.on", ro["traced_median_s"] * 1e6,
+            f"overhead={ro['overhead_frac']:+.3%}")
+    rec.row("serving.tracing.off", ro["untraced_median_s"] * 1e6,
+            "baseline")
+    rec.add_histograms(ro["histograms"])
+    rec.add_metrics(ro["metrics"])
+    fused_fails += check_overhead(ro)
+
     if args.smoke:
+        rec.finish()
         for f in fused_fails:
             print(f"FAIL: {f}")
         print("PASS" if not fused_fails else "FAIL")
@@ -708,6 +837,15 @@ def main(argv=None):
           f" hit, exec {m['exec_hits']}/{m['exec_hits'] + m['exec_misses']}"
           f" hit, compiles={m['compiles']}, "
           f"dedup_saved={m['dedup_saved']}")
+    rec.row("serving.warm.median", r["warm_median_s"] * 1e6,
+            f"p99_us={r['warm_p99_s'] * 1e6:.1f}")
+    rec.row("serving.throughput", 1e6 / max(r["throughput_qps"], 1e-9),
+            f"qps={r['throughput_qps']:.0f};batched_qps="
+            f"{r['batched_qps']:.0f}")
+    rec.row("serving.eager", r["eager_s"] * 1e6,
+            f"mode={r['eager_mode']}")
+    rec.add_metrics(m)
+    rec.finish()
 
     ok = True
     if r["speedup"] < 10:

@@ -80,6 +80,32 @@ def _unused_imports(tree: ast.Module) -> list[tuple[int, str]]:
             if name not in used]
 
 
+def _clock_discipline(paths: list[str]) -> int:
+    """Forbid raw ``time.perf_counter()`` in the serving tier outside
+    ``observability.py``.  The serving tier must take timestamps through
+    the injectable ``Observability`` clock (``service.obs``) so tests can
+    drive spans with a fake clock and the no-tracing path stays free of
+    clock reads; a raw ``perf_counter`` bypasses both.  (``time
+    .monotonic`` stays legal: the scheduler's formation-window deadline
+    is a real-time ``Condition.wait`` bound that a frozen fake clock must
+    never be able to hang.)  Always runs, even when ruff/pyflakes handle
+    the general lint."""
+    failures = 0
+    for f in _py_files(paths):
+        parts = f.parts
+        if "service" not in parts or "repro" not in parts:
+            continue
+        if f.name == "observability.py":
+            continue
+        for ln, line in enumerate(f.read_text().splitlines(), start=1):
+            if "perf_counter" in line.split("#")[0]:
+                print(f"{f}:{ln}: raw perf_counter in the serving tier — "
+                      "use the injectable Observability clock "
+                      "(service.obs) instead")
+                failures += 1
+    return 1 if failures else 0
+
+
 def _builtin_lint(paths: list[str]) -> int:
     print("lint: ruff/pyflakes not installed — built-in syntax + "
           "unused-import check")
@@ -106,11 +132,13 @@ def _builtin_lint(paths: list[str]) -> int:
 
 def main(argv: list[str]) -> int:
     paths = argv or [p for p in DEFAULT_PATHS if pathlib.Path(p).exists()]
+    clock_rc = _clock_discipline(paths)
     rc = _external(["ruff", "check"], paths)
     if rc is None:
         rc = _external(["pyflakes"], paths)
     if rc is None:
         rc = _builtin_lint(paths)
+    rc = rc or clock_rc
     print("lint: OK" if rc == 0 else "lint: FAIL")
     return rc
 

@@ -15,7 +15,13 @@
 #                                # plan rebuilds, persist_hits == distinct
 #                                # fingerprints, bitwise-identical answers;
 #                                # the XLA-cache compile-time and wall-clock
-#                                # wins are gated by the timed run only)
+#                                # wins are gated by the timed run only),
+#                                # AND the tracing-overhead scenario
+#                                # (tracing-on answers bitwise-identical to
+#                                # tracing-off, warm overhead bounded, all
+#                                # pipeline-stage histograms populated).
+#                                # Writes + schema-validates the
+#                                # BENCH_serving.json perf trajectory.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -25,8 +31,10 @@ echo "== lint (ruff/pyflakes, or built-in fallback) =="
 python scripts/lint.py
 
 if [[ "${1:-}" == "--smoke" ]]; then
-  echo "== smoke: fused + mixed-shape + async + restart warm-start gates =="
-  python benchmarks/serving_queries.py --smoke
+  echo "== smoke: fused + mixed + async + restart + tracing gates =="
+  python benchmarks/serving_queries.py --smoke --record BENCH_serving.json
+  echo "== smoke: BENCH_serving.json schema check =="
+  python -m benchmarks.recorder BENCH_serving.json
   exit 0
 fi
 

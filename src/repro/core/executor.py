@@ -31,8 +31,9 @@ raises ``MaterialisationLimit`` (reported as the paper's X entries).
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
-from typing import Any
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
@@ -77,7 +78,9 @@ class Executor:
     def __init__(self, db: dict[str, Table], schema: Schema,
                  freq_dtype=jnp.int32, backend: str = "xla",
                  interpret: bool = True, oom_guard: int | None = None,
-                 dense_domain: bool = False):
+                 dense_domain: bool = False,
+                 span_hook: Callable[[str], Any] | None = None,
+                 profile_annotations: bool = False):
         self.db = db
         self.schema = schema
         self.freq_dtype = freq_dtype
@@ -86,6 +89,14 @@ class Executor:
         self.oom_guard = oom_guard
         # beyond-paper: sort-free scatter-add FreqJoin on dense key domains
         self.dense_domain = dense_domain
+        # observability hooks: span_hook(name) -> context manager wraps the
+        # trace/execute phases (the serving tier wires its own spans above
+        # this layer; the hook is for standalone Executor users), and
+        # profile_annotations=True additionally emits
+        # jax.profiler.TraceAnnotation markers so the phases show up named
+        # in a JAX/Perfetto profiler capture
+        self.span_hook = span_hook
+        self.profile_annotations = profile_annotations
 
     def jittable(self) -> "Executor":
         """Copy with eager-only options stripped — the configuration
@@ -93,7 +104,23 @@ class Executor:
         guarded eager baselines and jitted plans."""
         return Executor(self.db, self.schema, self.freq_dtype, self.backend,
                         self.interpret, oom_guard=None,
-                        dense_domain=self.dense_domain)
+                        dense_domain=self.dense_domain,
+                        span_hook=self.span_hook,
+                        profile_annotations=self.profile_annotations)
+
+    @contextlib.contextmanager
+    def _span(self, name: str):
+        """Enter the caller's span hook and (optionally) a jax.profiler
+        trace annotation around one executor phase."""
+        with contextlib.ExitStack() as stack:
+            if self.profile_annotations:
+                try:
+                    stack.enter_context(jax.profiler.TraceAnnotation(name))
+                except Exception:
+                    pass  # profiler unavailable on this backend — skip
+            if self.span_hook is not None:
+                stack.enter_context(self.span_hook(name))
+            yield
 
     # ------------------------------------------------------------------
     def _domains(self, plan: PhysicalPlan, alias: str) -> dict[str, int | None]:
@@ -161,6 +188,12 @@ class Executor:
         overwritten in place (a ref-mode chain of materialising joins must
         not retain every expanded intermediate until the end)."""
         stats = stats if stats is not None else ExecStats()
+        if self.span_hook is not None or self.profile_annotations:
+            with self._span("executor.execute"):
+                return self._execute_inner(plan, stats)
+        return self._execute_inner(plan, stats)
+
+    def _execute_inner(self, plan: PhysicalPlan, stats: ExecStats):
         consumers: dict[int, int] = {}
         for node in plan.nodes:
             for i in node.inputs:
@@ -350,7 +383,7 @@ class Executor:
             # (self-joins scanning one relation twice, say)
             return self._trace_plan(db, plan, memo={})
 
-        return jax.jit(run)
+        return self._wrap_jitted(jax.jit(run), "executor.run")
 
     def compile_multi(self, plans: list[PhysicalPlan]):
         """Jit several static plans into ONE program: db → [aggregates].
@@ -369,7 +402,20 @@ class Executor:
             memo: dict = {}
             return [self._trace_plan(db, plan, memo) for plan in plans]
 
-        return jax.jit(run)
+        return self._wrap_jitted(jax.jit(run), "executor.run_multi")
+
+    def _wrap_jitted(self, jitted, name: str):
+        """With hooks active, run the jitted callable under a span (its
+        first call also covers the XLA trace + compile); otherwise return
+        it untouched so the serving hot path pays nothing."""
+        if self.span_hook is None and not self.profile_annotations:
+            return jitted
+
+        def wrapped(db: dict[str, Table]):
+            with self._span(name):
+                return jitted(db)
+
+        return wrapped
 
 
 def shared_subplan_savings(plans: list[PhysicalPlan]) -> int:

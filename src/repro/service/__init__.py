@@ -4,8 +4,9 @@ Guarded aggregate plans are static-dataflow programs — compile once, serve
 many.  This package owns everything between "SQL arrives" and "compiled
 program runs": query fingerprinting (``fingerprint``), the multi-level
 plan cache (``plan_cache``), the persistent cross-process plan store
-(``plan_store``), the concurrent micro-batching engine (``engine``), and
-the async cross-caller batch former (``scheduler``).
+(``plan_store``), the concurrent micro-batching engine (``engine``), the
+async cross-caller batch former (``scheduler``), and the tracing +
+metrics registry every request reports into (``observability``).
 """
 
 from repro.service.engine import (
@@ -19,6 +20,11 @@ from repro.service.fingerprint import (
     canonicalize,
     fingerprint,
     prefix_fingerprint,
+)
+from repro.service.observability import (
+    Histogram,
+    Observability,
+    TraceSpan,
 )
 from repro.service.plan_cache import LRUCache, PlanCache
 from repro.service.plan_store import (
@@ -37,8 +43,11 @@ __all__ = [
     "enable_executable_cache",
     "fingerprint",
     "prefix_fingerprint",
+    "Histogram",
     "LRUCache",
+    "Observability",
     "PlanCache",
+    "TraceSpan",
     "PlanStore",
     "QueryResult",
     "QueryService",

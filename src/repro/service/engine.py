@@ -79,6 +79,20 @@ any kind (corrupt entries, read-only volumes) degrade to memory-only
 caching and never attach an error to a request.  ``export_cache`` /
 ``import_cache`` move a warm cache between directories (e.g. to seed a
 fleet from one warmed pod).
+
+Observability: every request carries a ``TraceSpan`` tree (admit/parse →
+queue-wait → fingerprint → plan → pad → compile → run) recorded through
+``repro.service.observability`` — the ONLY timing source in this package
+(``scripts/lint.py`` enforces it).  Spans aggregate into streaming
+latency histograms; ``metrics_v2()`` returns the structured
+``{"counters", "gauges", "histograms"}`` snapshot (service counters read
+under ONE lock, so invariants like ``fused_queries <= requests`` hold in
+every snapshot), ``metrics()`` keeps the old flat dict as a deprecated
+view, ``export_trace(path)`` writes Chrome-trace/Perfetto JSON, and
+``explain(query)`` names the cache level that answered one request.
+Construct with ``tracing=False`` to drop every span (per-stage
+``ServeStats`` timings read 0.0 then — counters keep working); answers
+are bitwise-identical either way.
 """
 
 from __future__ import annotations
@@ -86,7 +100,6 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import threading
-import time
 from concurrent.futures import Future
 from typing import Any, Callable
 
@@ -102,6 +115,7 @@ from repro.core.plan import MaterializeJoinOp, PhysicalPlan, segment_plan
 from repro.core.rewrite import plan_query
 from repro.core.sql import parse_sql
 from repro.service.fingerprint import CanonicalQuery, canonicalize
+from repro.service.observability import NULL_SPAN, Observability, TraceSpan
 from repro.service.plan_cache import LRUCache, PlanCache, ShapeBucket
 from repro.service.plan_store import (
     PlanStore,
@@ -128,12 +142,17 @@ class ServeStats:
     fused: bool = False              # answered by a multi-query program
     fused_group_size: int = 0        # distinct fingerprints in that program
     bucket: ShapeBucket = ()
+    plan_source: str = ""            # memory | disk | built (cache level)
+    exec_source: str = ""            # exec_cache | compiled | fused_cache |
+                                     # fused_compiled | eager
     parse_s: float = 0.0
+    queue_s: float = 0.0             # async admission-queue wait
     plan_s: float = 0.0
     compile_s: float = 0.0
     run_s: float = 0.0
     total_s: float = 0.0
     exec_stats: ExecStats | None = None  # eager (ref/opt) plans only
+    trace: TraceSpan | None = dataclasses.field(default=None, repr=False)
 
 
 @dataclasses.dataclass
@@ -159,6 +178,7 @@ class _Request:
     stats: ServeStats
     error: BaseException | None = None   # captured per-request failure
     unit: "_Unit | None" = None          # back-pointer set by _plan_unit
+    trace: Any = NULL_SPAN               # this request's root TraceSpan
 
 
 @dataclasses.dataclass
@@ -175,6 +195,7 @@ class _Unit:
     prefix_key: str | None            # whole-prefix identity (diagnostics)
     subplans: frozenset               # non-trivial subplan content keys
     sig: str                          # member signature for the fused cache
+    plan_source: str = "memory"       # memory | disk | built
     results: dict = dataclasses.field(default_factory=dict)
 
     @property
@@ -192,12 +213,42 @@ class QueryService:
                  min_bucket: int = 8, async_max_batch: int = 64,
                  async_max_wait_ms: float = 2.0,
                  async_max_queue: int = 1024,
-                 cache_dir: str | None = None):
+                 cache_dir: str | None = None,
+                 clock: Callable[[], float] | None = None,
+                 tracing: bool = True,
+                 profile_annotations: bool = False):
         self._db = dict(db)
         self.schema = schema
         self.mode = mode
         self.use_fkpk = use_fkpk
         self.min_bucket = min_bucket
+        # the one timing source for the whole serving tier: counters,
+        # gauges, per-stage histograms, and per-request span trees.
+        # tracing=False keeps counters/gauges but makes every span a no-op
+        # (no clock reads on the hot path — the overhead baseline).
+        self.obs = Observability(clock, enabled=tracing)
+        # root-span handoff from the async batcher to submit_many (see
+        # there) — thread-local, so concurrent sync callers never see it
+        self._trace_handoff = threading.local()
+        self.obs.register_counters([
+            "requests", "batches", "dedup_saved", "compiles",
+            "eager_requests",
+            "plan_builds",            # plan_query pipeline actually ran
+                                      # (0 in a fully warm-started process)
+            "request_errors",         # per-request captured failures
+            "bucket_invalidations",
+            # cross-fingerprint fusion
+            "fused_batches",          # fused program executions
+            "fused_queries",          # distinct fingerprints they answered
+            "fused_compiles",         # of "compiles", how many were fused
+            "partial_fusions",        # fused runs beyond whole-prefix rule
+            "subplan_saved",          # subplan executions avoided
+            "compile_s_total",        # float: total seconds compiling
+            # async tier (bumped by the scheduler once it starts)
+            "async_requests", "async_batches", "rejected",
+        ])
+        self.obs.set_gauge("queue_depth", 0)
+        self.obs.register_peak_gauge("queue_depth_peak", "queue_depth")
         store = None
         if cache_dir is not None:
             # the store identity covers schema AND planner configuration:
@@ -211,7 +262,8 @@ class QueryService:
         self.cache = PlanCache(plan_capacity, exec_capacity, fused_capacity,
                                padded_capacity, store=store)
         self._jit_executor = Executor(self._db, schema, freq_dtype, backend,
-                                      interpret, dense_domain=dense_domain)
+                                      interpret, dense_domain=dense_domain,
+                                      profile_annotations=profile_annotations)
         # fingerprint → (eager, prefix_key, subplans, sig): the fusion
         # identity is a pure function of the canonical structure, so
         # memoise it across batches (bounded: cleared when it outgrows the
@@ -227,21 +279,6 @@ class QueryService:
                             async_max_queue)
         self._scheduler = None
         self._async_closed = False
-        self._counters = {
-            "requests": 0, "batches": 0, "dedup_saved": 0,
-            "compiles": 0, "eager_requests": 0,
-            "plan_builds": 0,         # plan_query pipeline actually ran
-                                      # (0 in a fully warm-started process)
-            "request_errors": 0,      # per-request captured failures
-            "bucket_invalidations": 0,
-            # cross-fingerprint fusion
-            "fused_batches": 0,       # fused program executions
-            "fused_queries": 0,       # distinct fingerprints they answered
-            "fused_compiles": 0,      # of "compiles", how many were fused
-            "partial_fusions": 0,     # fused runs beyond whole-prefix rule
-            "subplan_saved": 0,       # subplan executions avoided
-        }
-        self._compile_s_total = 0.0
 
     # ---- data plane ------------------------------------------------------
     def update_table(self, name: str, table: Table) -> None:
@@ -280,7 +317,7 @@ class QueryService:
             new_bucket = bucket_capacity(table.capacity, self.min_bucket)
             if old_bucket != new_bucket:
                 n = self.cache.invalidate_relation(name)
-                self._counters["bucket_invalidations"] += n
+                self.obs.inc("bucket_invalidations", n)
 
     def _snapshot(self, rels) -> tuple[ShapeBucket, dict[str, Table]]:
         """Shape bucket + bucket-padded table views for `rels`.
@@ -336,26 +373,41 @@ class QueryService:
 
         Fault isolation is per request: an admission/parse/planning/serve
         failure attaches to the offending request's ``QueryResult.error``
-        and never aborts its batch-mates."""
+        and never aborts its batch-mates.
+
+        The async scheduler hands over the root spans it opened at
+        enqueue time (so queue-wait is part of each request's tree)
+        through the ``_trace_handoff`` thread-local — a side channel, not
+        a parameter, so the public signature stays wrappable (tests
+        monkeypatch ``submit_many``); sync callers get a fresh root per
+        query here."""
         queries = list(queries)          # accept any iterable
+        _traces = getattr(self._trace_handoff, "traces", None)
+        self._trace_handoff.traces = None
         if not queries:
             return []                    # no work: don't count a batch
-        with self._lock:
-            # every submission counts, admitted or not — request_errors /
-            # requests is then a meaningful error rate
-            self._counters["requests"] += len(queries)
-        reqs = [self._try_admit(q) for q in queries]
+        if _traces is None or len(_traces) != len(queries):
+            _traces = [self.obs.begin_request() for _ in queries]
+        # every submission counts, admitted or not — request_errors /
+        # requests is then a meaningful error rate
+        self.obs.inc("requests", len(queries))
+        reqs = [self._try_admit(q, t) for q, t in zip(queries, _traces)]
         served = self._serve_batch([r for r in reqs if r.error is None])
         out = []
+        errors = 0
         for r in reqs:
             res = served.get(id(r))
             if res is None:              # admission/parse failure
                 res = QueryResult({}, r.stats, error=r.error)
+            if res.error is not None:
+                errors += 1
+                r.trace.note(error=type(res.error).__name__)
+            if r.trace is not NULL_SPAN:
+                r.stats.trace = r.trace
+            self.obs.end_request(r.trace)
             out.append(res)
-        errors = sum(1 for res in out if res.error is not None)
         if errors:
-            with self._lock:
-                self._counters["request_errors"] += errors
+            self.obs.inc("request_errors", errors)
         return out
 
     def submit_async(self, query) -> Future[QueryResult]:
@@ -450,10 +502,10 @@ class QueryService:
         groups: dict[str, list[_Request]] = {}
         for r in reqs:
             groups.setdefault(r.canon.fingerprint, []).append(r)
-        with self._lock:
-            self._counters["batches"] += 1
-            for group in groups.values():
-                self._counters["dedup_saved"] += len(group) - 1
+        self.obs.inc("batches")
+        dedup = sum(len(g) - 1 for g in groups.values())
+        if dedup:
+            self.obs.inc("dedup_saved", dedup)
 
         units = []
         for group in groups.values():
@@ -485,18 +537,20 @@ class QueryService:
                     results[id(r)] = QueryResult({}, r.stats, error=r.error)
                     continue
                 r.stats.shared_execution = i > 0
+                r.stats.queue_s = r.trace.child_duration("queue_wait")
                 r.stats.total_s = (r.stats.parse_s + r.stats.plan_s
                                    + r.stats.compile_s + r.stats.run_s)
                 results[id(r)] = QueryResult(
                     r.canon.rename_results(r.unit.results), r.stats)
         return results
 
-    def _try_admit(self, query) -> _Request:
+    def _try_admit(self, query, trace=NULL_SPAN) -> _Request:
         """Admission with per-request error capture."""
         try:
-            return self._admit(query)
+            return self._admit(query, trace)
         except Exception as e:
-            return _Request(canon=None, stats=ServeStats(), error=e)
+            return _Request(canon=None, stats=ServeStats(), error=e,
+                            trace=trace)
 
     def _try_serve(self, serve: Callable, u: _Unit) -> None:
         """Run one unit's serve step, attaching a failure to that unit's
@@ -507,12 +561,12 @@ class QueryService:
             for r in u.group:
                 r.error = e
 
-    def _admit(self, query) -> _Request:
+    def _admit(self, query, trace=NULL_SPAN) -> _Request:
         stats = ServeStats()
         if isinstance(query, str):
-            t0 = time.perf_counter()
-            query = parse_sql(query, self.schema)
-            stats.parse_s = time.perf_counter() - t0
+            with self.obs.span(trace, "parse") as sp:
+                query = parse_sql(query, self.schema)
+            stats.parse_s = sp.duration_s
         for atom in query.atoms:
             if atom.rel not in self.schema.relations:
                 raise AdmissionError(
@@ -523,9 +577,11 @@ class QueryService:
                     f"query references relation {atom.rel!r}, which has no "
                     f"table loaded; call update_table({atom.rel!r}, table) "
                     "first")
-        canon = canonicalize(query)
+        with self.obs.span(trace, "fingerprint"):
+            canon = canonicalize(query)
         stats.fingerprint = canon.fingerprint
-        return _Request(canon, stats)
+        trace.note(fingerprint=canon.fingerprint)
+        return _Request(canon, stats, trace=trace)
 
     def _plan_unit(self, group: list[_Request]) -> _Unit:
         """Plan lookup for one fingerprint group: memory (plan-cache L1) →
@@ -538,24 +594,30 @@ class QueryService:
         store entirely; freshly built shareable plans are written back
         best-effort (a failed write degrades to memory-only caching)."""
         canon = group[0].canon
+        roots = [r.trace for r in group]
+        source = "memory"                # overwritten when build() runs
 
         def build():
+            nonlocal source
             if canon.shareable:
                 plan = self.cache.load_persistent(canon.fingerprint)
                 if plan is not None:
+                    source = "disk"
                     return plan
             plan = plan_query(canon.query, self.schema, mode=self.mode,
                               use_fkpk=self.use_fkpk)
-            with self._lock:
-                self._counters["plan_builds"] += 1
+            source = "built"
+            self.obs.inc("plan_builds")
             if canon.shareable:
                 self.cache.save_persistent(canon.fingerprint, plan)
             return plan
 
-        t0 = time.perf_counter()
-        plan, plan_hit = self._get_or_build(
-            self.cache.plans, canon.fingerprint, build)
-        plan_s = time.perf_counter() - t0
+        with self.obs.span(roots, "plan",
+                           fingerprint=canon.fingerprint) as sp:
+            plan, plan_hit = self._get_or_build(
+                self.cache.plans, canon.fingerprint, build)
+            sp.note(source="memory" if plan_hit else source, hit=plan_hit)
+        plan_s = sp.duration_s
         with self._lock:
             seg = self._segments.get(canon.fingerprint)
         if seg is None:
@@ -577,7 +639,8 @@ class QueryService:
                 self._segments[canon.fingerprint] = seg
         eager, prefix_key, subplans, sig = seg
         unit = _Unit(group, plan, plan_hit, plan_s, eager, prefix_key,
-                     subplans, sig)
+                     subplans, sig,
+                     plan_source="memory" if plan_hit else source)
         for r in group:
             r.unit = unit
         return unit
@@ -664,7 +727,7 @@ class QueryService:
 
     def _finish_unit(self, u: _Unit, results: dict, *, exec_hit: bool,
                      bucket: ShapeBucket, compile_s: float, run_s: float,
-                     fused_size: int = 0) -> None:
+                     fused_size: int = 0, exec_source: str = "") -> None:
         u.results = results
         for r in u.group:
             r.stats.mode = u.plan.mode
@@ -673,21 +736,26 @@ class QueryService:
             r.stats.fused = fused_size > 1
             r.stats.fused_group_size = fused_size
             r.stats.bucket = bucket
+            r.stats.plan_source = u.plan_source
+            r.stats.exec_source = exec_source
             r.stats.plan_s = u.plan_s
             r.stats.compile_s = compile_s
             r.stats.run_s = run_s
 
     def _serve_single(self, u: _Unit) -> None:
         """The classic path: one fingerprint, one executable."""
-        bucket, sub_db = self._snapshot(u.plan.scanned_rels())
+        roots = [r.trace for r in u.group]
+        with self.obs.span(roots, "pad"):
+            bucket, sub_db = self._snapshot(u.plan.scanned_rels())
         fn, exec_hit, compile_s = self._executable(u.canon, u.plan, bucket,
-                                                   sub_db)
-        t0 = time.perf_counter()
-        results = fn(sub_db)
-        jax.block_until_ready(results)
-        run_s = time.perf_counter() - t0
+                                                   sub_db, roots)
+        with self.obs.span(roots, "run") as rsp:
+            results = fn(sub_db)
+            jax.block_until_ready(results)
         self._finish_unit(u, results, exec_hit=exec_hit, bucket=bucket,
-                          compile_s=compile_s, run_s=run_s)
+                          compile_s=compile_s, run_s=rsp.duration_s,
+                          exec_source="exec_cache" if exec_hit
+                          else "compiled")
 
     def _serve_fused(self, units: list[_Unit]) -> None:
         """Compile and run several subplan-sharing fingerprints as ONE
@@ -695,61 +763,67 @@ class QueryService:
         remaining ops fold the shared vectors into its own answer."""
         units.sort(key=lambda u: u.canon.fingerprint)
         plans = [u.plan for u in units]
+        # one set of spans shared by EVERY member request's trace tree —
+        # a fused batch has exactly one pad/compile/run, so exactly one
+        # span each, fanned out to all roots (export dedups by identity)
+        roots = [r.trace for u in units for r in u.group]
         rels = sorted({rel for p in plans for rel in p.scanned_rels()})
-        bucket, sub_db = self._snapshot(rels)
+        with self.obs.span(roots, "pad"):
+            bucket, sub_db = self._snapshot(rels)
         signature = hashlib.sha256(
             repr(tuple(u.sig for u in units)).encode()).hexdigest()
         compile_s = 0.0
 
         def build():
             nonlocal compile_s
-            t0 = time.perf_counter()
-            fn = self._jit_executor.compile_multi(plans)
-            jax.block_until_ready(fn(sub_db))
-            compile_s = time.perf_counter() - t0
-            with self._lock:
-                self._counters["compiles"] += 1
-                self._counters["fused_compiles"] += 1
-                self._compile_s_total += compile_s
+            with self.obs.span(roots, "compile", cold=True, fused=True,
+                               members=len(units)) as sp:
+                fn = self._jit_executor.compile_multi(plans)
+                jax.block_until_ready(fn(sub_db))
+            compile_s = sp.duration_s
+            self.obs.inc("compiles")
+            self.obs.inc("fused_compiles")
+            self.obs.inc("compile_s_total", compile_s)
             return fn
 
         fn, exec_hit = self._get_or_build(
             self.cache.fused, PlanCache.fused_key(signature, bucket), build)
-        t0 = time.perf_counter()
-        outs = fn(sub_db)
-        jax.block_until_ready(outs)
-        run_s = time.perf_counter() - t0
+        with self.obs.span(roots, "run", fused=True) as rsp:
+            outs = fn(sub_db)
+            jax.block_until_ready(outs)
 
-        with self._lock:
-            self._counters["fused_batches"] += 1
-            self._counters["fused_queries"] += len(units)
-            self._counters["subplan_saved"] += shared_subplan_savings(plans)
-            if len({u.prefix_key for u in units}) > 1:
-                # members do NOT all share one whole prefix: this fusion is
-                # beyond PR 2's equal-prefix rule (different join shapes)
-                self._counters["partial_fusions"] += 1
+        self.obs.inc("fused_batches")
+        self.obs.inc("fused_queries", len(units))
+        self.obs.inc("subplan_saved", shared_subplan_savings(plans))
+        if len({u.prefix_key for u in units}) > 1:
+            # members do NOT all share one whole prefix: this fusion is
+            # beyond PR 2's equal-prefix rule (different join shapes)
+            self.obs.inc("partial_fusions")
         for u, results in zip(units, outs):
             self._finish_unit(u, results, exec_hit=exec_hit, bucket=bucket,
-                              compile_s=compile_s, run_s=run_s,
-                              fused_size=len(units))
+                              compile_s=compile_s, run_s=rsp.duration_s,
+                              fused_size=len(units),
+                              exec_source="fused_cache" if exec_hit
+                              else "fused_compiled")
 
     def _executable(self, canon: CanonicalQuery, plan: PhysicalPlan,
                     bucket: ShapeBucket, sub_db: dict[str, Table],
+                    parents=(),
                     ) -> tuple[Callable, bool, float]:
         compile_s = 0.0
 
         def build():
             nonlocal compile_s
-            t0 = time.perf_counter()
-            fn = self._jit_executor.compile(plan)
-            # trace + compile now, against the snapshot's bucket shapes, so
-            # the cache entry is a ready-to-run program and `run_s` is pure
-            # execution
-            jax.block_until_ready(fn(sub_db))
-            compile_s = time.perf_counter() - t0
-            with self._lock:
-                self._counters["compiles"] += 1
-                self._compile_s_total += compile_s
+            with self.obs.span(parents, "compile", cold=True, fused=False,
+                               fingerprint=canon.fingerprint) as sp:
+                fn = self._jit_executor.compile(plan)
+                # trace + compile now, against the snapshot's bucket
+                # shapes, so the cache entry is a ready-to-run program and
+                # `run_s` is pure execution
+                jax.block_until_ready(fn(sub_db))
+            compile_s = sp.duration_s
+            self.obs.inc("compiles")
+            self.obs.inc("compile_s_total", compile_s)
             return fn
 
         fn, hit = self._get_or_build(
@@ -761,8 +835,9 @@ class QueryService:
         """Fallback for non-jittable (materialising) plans: serve eagerly
         with the paper's per-step ExecStats attached."""
         base = self._jit_executor
+        roots = [r.trace for r in u.group]
+        self.obs.inc("eager_requests", len(u.group))
         with self._lock:
-            self._counters["eager_requests"] += len(u.group)
             # snapshot the scanned tables under the lock (tables are
             # immutable): execution then runs unlocked over a consistent
             # database state even if update_table swaps relations mid-run
@@ -770,34 +845,99 @@ class QueryService:
         ex = Executor(sub_db, self.schema, base.freq_dtype, base.backend,
                       base.interpret, dense_domain=base.dense_domain)
         stats = ExecStats()
-        t0 = time.perf_counter()
-        results = ex.execute(u.plan, stats)
-        # the executor's "__stats__" sentinel is bookkeeping, not an answer
-        # column: it travels via ServeStats.exec_stats only
-        results.pop("__stats__", None)
-        jax.block_until_ready(list(results.values()))
-        run_s = time.perf_counter() - t0
+        with self.obs.span(roots, "run", eager=True) as rsp:
+            results = ex.execute(u.plan, stats)
+            # the executor's "__stats__" sentinel is bookkeeping, not an
+            # answer column: it travels via ServeStats.exec_stats only
+            results.pop("__stats__", None)
+            jax.block_until_ready(list(results.values()))
         self._finish_unit(u, results, exec_hit=False, bucket=(),
-                          compile_s=0.0, run_s=run_s)
+                          compile_s=0.0, run_s=rsp.duration_s,
+                          exec_source="eager")
         for r in u.group:
             r.stats.exec_stats = stats
 
     # ---- observability ---------------------------------------------------
-    _ASYNC_ZEROS = {"async_requests": 0, "async_batches": 0,
-                    "queue_depth_peak": 0, "rejected": 0}
+    def metrics_v2(self) -> dict[str, Any]:
+        """Structured metrics: ``{"counters", "gauges", "histograms"}``.
+
+        The service counters (requests/compiles/fused_*/async_*/...) come
+        from ONE lock acquisition inside ``Observability.snapshot`` — so
+        cross-counter invariants that hold in program order (a request is
+        counted before anything it causes) hold in every snapshot too;
+        ``fused_queries > requests`` can no longer be observed.  Cache
+        counters are added under the service lock, persistent-store
+        counters last under the store's own lock (its disk I/O never
+        stalls the hot path and no locks nest).  Histograms carry
+        per-stage p50/p95/p99 (parse/plan/pad/compile/run/queue_wait/
+        request/...).  Peak gauges (``queue_depth_peak``) reset to the
+        current value on read."""
+        snap = self.obs.snapshot()
+        with self._lock:
+            snap["counters"].update(self.cache.metrics())
+            snap["gauges"]["padded_relations"] = len(self.cache.padded)
+        snap["counters"].update(self.cache.persist_metrics())
+        return snap
 
     def metrics(self) -> dict[str, Any]:
-        with self._lock:
-            out = dict(self._counters)
-            out.update(self.cache.metrics())
-            out["compile_s_total"] = self._compile_s_total
-            out["padded_relations"] = len(self.cache.padded)
-            sch = self._scheduler
-        # the scheduler and the persistent store snapshot their own
-        # counters under their own locks — taken outside ours so the locks
-        # never nest and the store's disk I/O (entry count) never stalls
-        # the hot path
-        out.update(sch.metrics() if sch is not None
-                   else dict(self._ASYNC_ZEROS))
-        out.update(self.cache.persist_metrics())
+        """Deprecated flat view of ``metrics_v2()`` (counters and gauges
+        merged into one dict — the pre-observability shape)."""
+        v2 = self.metrics_v2()
+        out = dict(v2["counters"])
+        out.update(v2["gauges"])
         return out
+
+    def export_trace(self, path) -> int:
+        """Write the retained request traces as Chrome-trace JSON —
+        loadable in Perfetto (https://ui.perfetto.dev) or
+        ``chrome://tracing``.  Returns the number of events written."""
+        return self.obs.export_chrome_trace(path)
+
+    def explain(self, query) -> dict[str, Any]:
+        """Serve `query` once and report HOW it was answered: the cache
+        level that supplied the plan and the executable, fusion-group
+        membership, the content-addressed graph/subplan keys, and the
+        per-stage timings.  ``["text"]`` is a rendered report."""
+        res = self.submit(query)
+        st = res.stats
+        fp = st.fingerprint
+        with self._lock:
+            seg = self._segments.get(fp)
+        eager, prefix_key, subplans, sig = seg if seg is not None \
+            else (False, None, frozenset(), fp)
+        with self._lock:
+            levels = self.cache.describe(fp, st.bucket, signature=sig)
+        report = {
+            "fingerprint": fp,
+            "mode": st.mode,
+            "eager": eager,
+            "plan_source": st.plan_source,
+            "exec_source": st.exec_source,
+            "cache_levels": levels,
+            "fused": st.fused,
+            "fused_group_size": st.fused_group_size,
+            "graph_key": sig,
+            "prefix_key": prefix_key,
+            "subplan_keys": sorted(subplans, key=repr),
+            "bucket": st.bucket,
+            "timings_s": {"parse": st.parse_s, "queue": st.queue_s,
+                          "plan": st.plan_s, "compile": st.compile_s,
+                          "run": st.run_s, "total": st.total_s},
+        }
+        lines = [f"query {fp[:16]}… mode={st.mode}"
+                 + (" (eager fallback)" if eager else ""),
+                 f"  plan:  {st.plan_source}"
+                 f" (in-memory={levels['plan_in_memory']},"
+                 f" on-disk={levels['plan_on_disk']})",
+                 f"  exec:  {st.exec_source}"
+                 f" (in-memory={levels.get('exec_in_memory', False)})",
+                 f"  fused: {st.fused}"
+                 + (f" (group of {st.fused_group_size})" if st.fused
+                    else ""),
+                 f"  graph_key: {sig[:32]}",
+                 f"  shared subplans: {len(subplans)}",
+                 "  timings: " + " ".join(
+                     f"{k}={v * 1e3:.2f}ms"
+                     for k, v in report["timings_s"].items())]
+        report["text"] = "\n".join(lines)
+        return report

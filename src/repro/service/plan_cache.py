@@ -192,6 +192,25 @@ class PlanCache:
         Not an eviction: the entry is simply stale."""
         self.padded.invalidate_if(lambda k: k == rel)
 
+    def describe(self, fingerprint: str, bucket: ShapeBucket | None = None,
+                 signature: str | None = None) -> dict[str, bool]:
+        """Hit-level attribution for one fingerprint — which cache levels
+        could answer it RIGHT NOW.  Counter-free and LRU-order-free
+        (``peek`` semantics): this is an inspection surface for
+        ``QueryService.explain``, not a lookup."""
+        out = {
+            "plan_in_memory": fingerprint in self.plans,
+            "plan_on_disk": (self.store.has(fingerprint)
+                             if self.store is not None else False),
+        }
+        if bucket is not None:
+            out["exec_in_memory"] = \
+                self.exec_key(fingerprint, bucket) in self.execs
+            if signature is not None:
+                out["fused_in_memory"] = \
+                    self.fused_key(signature, bucket) in self.fused
+        return out
+
     def metrics(self) -> dict[str, int]:
         """The LRU levels' counters.  The persistent level reports via
         ``persist_metrics()`` — kept separate because it touches the disk

@@ -200,6 +200,16 @@ class PlanStore:
         except OSError:
             return []
 
+    def has(self, fingerprint: str) -> bool:
+        """Existence probe for hit-level attribution (``explain()``):
+        does an entry file exist for `fingerprint`?  Touches no counters
+        and performs no verification — a damaged entry still reports
+        True until a real ``load`` evicts it."""
+        try:
+            return self._path(fingerprint).exists()
+        except OSError:
+            return False
+
     # ---- load ------------------------------------------------------------
     def load(self, fingerprint: str) -> PhysicalPlan | None:
         """Return the persisted plan, or None (re-plan).  Damaged entries

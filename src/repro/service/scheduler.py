@@ -28,8 +28,17 @@ pattern:
   batch-mates are never aborted (the engine's per-request fault
   isolation).
 
-Counters (``async_requests``, ``async_batches``, ``queue_depth_peak``,
-``rejected``) are merged into ``QueryService.metrics()``.
+Observability: the scheduler books its counters (``async_requests``,
+``async_batches``, ``rejected``) and the ``queue_depth`` gauge straight
+into the service's ``Observability`` registry — ``queue_depth_peak`` is
+a PEAK GAUGE there: each ``metrics()`` snapshot reports the high-water
+mark since the previous snapshot, then resets it to the current depth
+(not a forever-high counter).  Each request's root ``TraceSpan`` is
+opened at enqueue with a ``queue_wait`` child closed when the batcher
+claims it, so queue time is visible per request and as a histogram; the
+formation window records a shared ``batch_form`` span.  The scheduler
+holds the registry strongly (it never references the service, so the
+drop-the-service GC guarantee below is unaffected).
 
 Latency/throughput trade-off: ``max_wait_ms`` is the most a lone request
 waits for company; under load the window closes early at ``max_batch``,
@@ -44,6 +53,8 @@ import time
 import weakref
 from concurrent.futures import Future, InvalidStateError
 from typing import TYPE_CHECKING
+
+from repro.service.observability import NULL_SPAN
 
 if TYPE_CHECKING:  # import cycle guard: engine lazily imports this module
     from repro.service.engine import QueryResult, QueryService
@@ -81,15 +92,17 @@ class AsyncScheduler:
         # in-flight futures always get served.
         self._service_ref = weakref.ref(service)
         self._keepalive: QueryService | None = None
+        # strong on purpose: the registry never references the service,
+        # so pinning it keeps counters/spans working without keeping the
+        # service (tables, caches, executables) alive
+        self._obs = service.obs
         self._max_batch = max_batch
         self._max_wait_s = max_wait_ms / 1e3
         self._max_queue = max_queue
-        self._queue: collections.deque[tuple[object, Future]] = \
-            collections.deque()
+        # (query, future, root trace span, open queue_wait span)
+        self._queue: collections.deque[tuple] = collections.deque()
         self._cv = threading.Condition()
         self._closed = False
-        self._counters = {"async_requests": 0, "async_batches": 0,
-                          "queue_depth_peak": 0, "rejected": 0}
         self._thread = threading.Thread(target=self._drain_loop,
                                         name="query-service-batcher",
                                         daemon=True)
@@ -105,21 +118,34 @@ class AsyncScheduler:
             if self._closed:
                 raise RuntimeError("scheduler is closed")
             if len(self._queue) >= self._max_queue:
-                self._counters["rejected"] += 1
+                self._obs.inc("rejected")
                 raise AdmissionError(
                     f"admission queue full ({self._max_queue} requests "
                     "pending); backpressure — retry later")
-            self._queue.append((query, fut))
+            # the request's trace starts HERE: queue time is part of its
+            # latency, so the root opens at enqueue and the engine ends it
+            # (the scheduler hands the root through submit_many(_traces=))
+            root = self._obs.begin_request(via="async")
+            qspan = self._obs.open_span(root, "queue_wait")
+            self._queue.append((query, fut, root, qspan))
             self._keepalive = self._service_ref()  # pin while work pends
-            self._counters["async_requests"] += 1
-            self._counters["queue_depth_peak"] = max(
-                self._counters["queue_depth_peak"], len(self._queue))
+            self._obs.inc("async_requests")
+            self._obs.set_gauge("queue_depth", len(self._queue))
             self._cv.notify_all()
         return fut
 
     def metrics(self) -> dict[str, int]:
-        with self._cv:
-            return dict(self._counters)
+        """Deprecated thin view over the shared registry (the engine's
+        ``metrics()``/``metrics_v2()`` are the real read path).  NOTE:
+        reading snapshots the registry, so it resets peak gauges just as
+        the engine's ``metrics()`` does."""
+        snap = self._obs.snapshot()
+        c, g = snap["counters"], snap["gauges"]
+        return {"async_requests": c.get("async_requests", 0),
+                "async_batches": c.get("async_batches", 0),
+                "rejected": c.get("rejected", 0),
+                "queue_depth": g.get("queue_depth", 0),
+                "queue_depth_peak": g.get("queue_depth_peak", 0)}
 
     def close(self, timeout: float | None = 10.0) -> None:
         """Stop the batcher.  Requests already queued are drained and
@@ -132,7 +158,8 @@ class AsyncScheduler:
         with self._cv:
             leftovers = list(self._queue)
             self._queue.clear()
-        for _, fut in leftovers:  # join timed out mid-drain
+            self._obs.set_gauge("queue_depth", 0)
+        for _, fut, _root, _qspan in leftovers:  # join timed out mid-drain
             _resolve(fut, error=RuntimeError("scheduler closed before the "
                                              "request could be served"))
 
@@ -149,7 +176,7 @@ class AsyncScheduler:
                     if not self._queue:      # idle again: unpin the service
                         self._keepalive = None
 
-    def _next_batch(self) -> list[tuple[object, Future]] | None:
+    def _next_batch(self) -> list[tuple] | None:
         """Block until work arrives, hold the formation window open, then
         claim up to ``max_batch`` requests.  None means closed + drained
         (or the owning service was garbage-collected)."""
@@ -160,7 +187,11 @@ class AsyncScheduler:
                 # bounded wait: the heartbeat re-checks service liveness
                 self._cv.wait(timeout=1.0)
             # formation window: wait for co-arriving callers (skipped when
-            # the queue is already a full batch, or on shutdown)
+            # the queue is already a full batch, or on shutdown).
+            # time.monotonic (not the injectable obs clock) on purpose:
+            # this is a REAL-TIME wait bound for Condition.wait, and a
+            # test-injected fake clock must not be able to hang the window
+            bspan = self._obs.open_span(None, "batch_form")
             deadline = time.monotonic() + self._max_wait_s
             while len(self._queue) < self._max_batch and not self._closed:
                 remaining = deadline - time.monotonic()
@@ -169,26 +200,42 @@ class AsyncScheduler:
                 self._cv.wait(remaining)
             n = min(len(self._queue), self._max_batch)
             batch = [self._queue.popleft() for _ in range(n)]
-            self._counters["async_batches"] += 1
+            self._obs.set_gauge("queue_depth", len(self._queue))
+            self._obs.inc("async_batches")
+        self._obs.close_span(bspan)
+        bspan.note(claimed=n)
+        for _, _, _root, qspan in batch:
+            # queue time ends when the batcher claims the request; the
+            # shared formation window rides along INSIDE every member's
+            # queue_wait (it overlaps the wait, so attaching it to the
+            # request root would break root ≥ Σ direct children)
+            self._obs.close_span(qspan)
+            if bspan is not NULL_SPAN and qspan is not NULL_SPAN:
+                qspan.children.append(bspan)
         return batch
 
-    def _serve(self, batch: list[tuple[object, Future]]) -> None:
+    def _serve(self, batch: list[tuple]) -> None:
         """One shared pipeline run for the whole window; per-request
         fan-out of answers and captured errors onto the futures."""
         service = self._service_ref()
         if service is None:
-            for _, fut in batch:
+            for _, fut, _root, _qspan in batch:
                 _resolve(fut, error=RuntimeError(
                     "QueryService was garbage-collected before the "
                     "request could be served"))
             return
         try:
-            results = service.submit_many([q for q, _ in batch])
+            # hand the enqueue-time roots over through the thread-local
+            # (not a kwarg: submit_many's public signature stays
+            # wrappable); submit_many consumes it on this same thread
+            service._trace_handoff.traces = [r for _, _, r, _ in batch]
+            results = service.submit_many([q for q, _, _, _ in batch])
         except BaseException as e:  # engine bug — fail loudly, hang nobody
-            for _, fut in batch:
+            service._trace_handoff.traces = None
+            for _, fut, _root, _qspan in batch:
                 _resolve(fut, error=e)
             return
-        for (_, fut), res in zip(batch, results):
+        for (_, fut, _root, _qspan), res in zip(batch, results):
             if res.error is not None:
                 _resolve(fut, error=res.error)
             else:

@@ -1,0 +1,419 @@
+"""Observability subsystem: fake-clock span trees, histogram math,
+single-snapshot metric consistency, Chrome-trace export, explain(), the
+BENCH recorder schema, and the serving-tier clock-discipline lint."""
+
+import json
+import pathlib
+import subprocess
+import sys
+import threading
+
+import jax
+import numpy as np
+import pytest
+
+sys.path.insert(0, str(pathlib.Path(__file__).resolve().parent.parent))
+
+from benchmarks.recorder import Recorder, validate_bench
+from benchmarks.recorder import main as recorder_main
+from repro.data import make_tpch_db
+from repro.service import QueryService
+from repro.service.observability import (
+    _BUCKET_BOUNDS,
+    NULL_SPAN,
+    Histogram,
+    Observability,
+    TraceSpan,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+FIG1 = """
+SELECT MIN(s.s_acctbal), MAX(s.s_acctbal)
+FROM region r, nation n, supplier s, partsupp ps, part p
+WHERE r.r_regionkey = n.n_regionkey AND n.n_nationkey = s.s_nationkey
+  AND s.s_suppkey = ps.ps_suppkey AND ps.ps_partkey = p.p_partkey
+  AND r.r_name IN (2, 3) AND p.p_price > 1200.0
+"""
+_SUPP_DIMS = """FROM supplier s, nation n, region r
+WHERE s.s_nationkey = n.n_nationkey AND n.n_regionkey = r.r_regionkey
+  AND r.r_name IN (2, 3)"""
+# one fusion family: shared supplier⋈nation⋈region prefix
+FAMILY = [
+    f"SELECT MIN(s.s_acctbal), MAX(s.s_acctbal) {_SUPP_DIMS}",
+    f"SELECT SUM(s.s_acctbal) {_SUPP_DIMS}",
+    f"SELECT MEDIAN(s.s_acctbal) {_SUPP_DIMS}",
+]
+
+
+class FakeClock:
+    """Deterministic monotonic clock: every read advances by `step`."""
+
+    def __init__(self, step=1.0):
+        self.t = 0.0
+        self.step = step
+
+    def __call__(self):
+        self.t += self.step
+        return self.t
+
+
+# ---------------------------------------------------------------------------
+# histogram
+# ---------------------------------------------------------------------------
+def test_histogram_percentiles_and_snapshot():
+    h = Histogram()
+    for ms in (1, 1, 1, 1, 1, 1, 1, 1, 1, 100):  # 9 fast + 1 slow
+        h.record(ms / 1e3)
+    assert h.count == 10
+    assert h.sum_s == pytest.approx(0.109)
+    assert h.max_s == pytest.approx(0.1)
+    # p50 lands in the 1 ms bucket (upper bound within one bucket width),
+    # p99 in the 100 ms bucket
+    assert 1e-3 <= h.percentile(0.50) <= 1e-3 * 10 ** (1 / 8)
+    assert 0.1 <= h.percentile(0.99) <= 0.1 * 10 ** (1 / 8)
+    snap = h.snapshot()
+    for k in ("count", "sum_s", "max_s", "p50_s", "p95_s", "p99_s",
+              "buckets"):
+        assert k in snap
+    assert sum(c for _, c in snap["buckets"]) == 10
+
+
+def test_histogram_overflow_bucket_uses_max():
+    h = Histogram()
+    h.record(500.0)  # beyond the 100 s top bound
+    assert h.percentile(0.99) == pytest.approx(500.0)
+    assert h.snapshot()["buckets"][-1] == (None, 1)
+
+
+def test_bucket_bounds_cover_1us_to_100s():
+    assert _BUCKET_BOUNDS[0] == pytest.approx(1e-6)
+    assert _BUCKET_BOUNDS[-1] == pytest.approx(100.0)
+
+
+# ---------------------------------------------------------------------------
+# spans + registry (fake clock, no service)
+# ---------------------------------------------------------------------------
+def test_span_tree_with_fake_clock():
+    obs = Observability(FakeClock())
+    root = obs.begin_request(via="test")
+    with obs.span(root, "plan") as sp:
+        sp.note(source="built")
+    obs.end_request(root)
+    assert root.closed and root.duration_s > 0
+    assert [c.name for c in root.children] == ["plan"]
+    assert root.children[0].args == {"source": "built"}
+    # children strictly nested: sum of child durations <= root duration
+    assert sum(c.duration_s for c in root.children) <= root.duration_s
+    snap = obs.snapshot()
+    assert snap["histograms"]["request"]["count"] == 1
+    assert snap["histograms"]["plan"]["count"] == 1
+
+
+def test_span_shared_by_many_parents_attached_once_each():
+    obs = Observability(FakeClock())
+    roots = [obs.begin_request() for _ in range(3)]
+    # duplicate parents are deduped by identity
+    span = obs.open_span(roots + [roots[0]], "compile", fused=True)
+    obs.close_span(span)
+    for r in roots:
+        assert r.children.count(span) == 1
+    assert isinstance(span, TraceSpan)
+
+
+def test_disabled_observability_is_inert():
+    clock = FakeClock()
+    obs = Observability(clock, enabled=False)
+    root = obs.begin_request()
+    assert root is NULL_SPAN
+    with obs.span(root, "plan") as sp:
+        assert sp is NULL_SPAN
+        sp.note(ignored=True)
+    obs.end_request(root)
+    assert clock.t == 0.0  # no clock reads at all
+    snap = obs.snapshot()
+    assert snap["histograms"] == {}
+    assert obs.traces() == []
+
+
+def test_span_ctx_notes_error_and_closes():
+    obs = Observability(FakeClock())
+    root = obs.begin_request()
+    with pytest.raises(ValueError):
+        with obs.span(root, "parse"):
+            raise ValueError("boom")
+    (sp,) = root.children
+    assert sp.closed
+    assert sp.args["error"] == "ValueError"
+
+
+def test_peak_gauge_resets_on_snapshot():
+    obs = Observability(FakeClock())
+    obs.set_gauge("queue_depth", 0)
+    obs.register_peak_gauge("queue_depth_peak", "queue_depth")
+    obs.set_gauge("queue_depth", 7)
+    obs.set_gauge("queue_depth", 2)
+    snap = obs.snapshot()
+    assert snap["gauges"]["queue_depth"] == 2
+    assert snap["gauges"]["queue_depth_peak"] == 7
+    # the read reset the high-water mark to the current value
+    assert obs.snapshot()["gauges"]["queue_depth_peak"] == 2
+
+
+def test_trace_retention_is_bounded():
+    obs = Observability(FakeClock(), max_traces=4)
+    for _ in range(10):
+        obs.end_request(obs.begin_request())
+    assert len(obs.traces()) == 4
+
+
+# ---------------------------------------------------------------------------
+# service integration (real queries, fake clock where possible)
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def tpch():
+    return make_tpch_db(scale=40)
+
+
+def test_submit_trace_children_sum_within_request(tpch):
+    db, schema = tpch
+    svc = QueryService(db, schema, clock=FakeClock(1e-3))
+    svc.submit(FIG1)
+    svc.submit(FIG1)  # warm pass: same invariant with cache hits
+    roots = svc.obs.traces()
+    assert len(roots) == 2
+    for root in roots:
+        assert root.name == "request"
+        names = [c.name for c in root.children]
+        assert "parse" in names and "fingerprint" in names
+        assert sum(c.duration_s for c in root.children) <= root.duration_s
+    # cold request carries plan/pad/compile/run children
+    cold_names = {c.name for c in roots[0].children}
+    assert {"plan", "pad", "compile", "run"} <= cold_names
+    # stats surface the same tree
+    st = svc.submit(FIG1).stats
+    assert st.trace is not None and st.trace.closed
+    assert st.plan_source == "memory" and st.exec_source == "exec_cache"
+
+
+def test_submit_many_fused_batch_has_one_shared_compile_span(tpch):
+    db, schema = tpch
+    svc = QueryService(db, schema, clock=FakeClock(1e-3))
+    results = svc.submit_many(FAMILY)
+    assert all(r.error is None for r in results)
+    roots = svc.obs.traces()
+    assert len(roots) == len(FAMILY)
+    compile_spans = {id(s): s for root in roots for s in root.walk()
+                     if s.name == "compile"}
+    # exactly ONE compile span object, attached to every member's root
+    assert len(compile_spans) == 1
+    (span,) = compile_spans.values()
+    assert span.args.get("fused") is True
+    for root in roots:
+        assert any(s is span for s in root.walk())
+        assert sum(c.duration_s for c in root.children) <= root.duration_s
+    m = svc.metrics()
+    assert m["fused_queries"] == len(FAMILY)
+    assert m["fused_compiles"] == 1
+
+
+def test_submit_async_trace_has_queue_wait(tpch):
+    db, schema = tpch
+    svc = QueryService(db, schema, async_max_wait_ms=50)
+    try:
+        res = svc.submit_async(FIG1).result(timeout=120)
+        assert res.error is None
+        assert res.stats.queue_s > 0.0
+        (root,) = [t for t in svc.obs.traces() if t.name == "request"]
+        names = [c.name for c in root.children]
+        assert "queue_wait" in names
+        # the shared formation-window span nests INSIDE queue_wait (they
+        # overlap in real time, so it must not be a direct root child)
+        (qspan,) = [c for c in root.children if c.name == "queue_wait"]
+        assert "batch_form" in [c.name for c in qspan.children]
+        assert sum(c.duration_s for c in root.children) <= root.duration_s
+        g = svc.metrics_v2()["gauges"]
+        assert g["queue_depth"] == 0
+        assert g["queue_depth_peak"] >= 1  # resettable high-water mark
+        assert svc.metrics_v2()["gauges"]["queue_depth_peak"] == 0
+    finally:
+        svc.close()
+
+
+def test_tracing_disabled_identical_answers_no_traces(tpch):
+    db, schema = tpch
+    traced = QueryService(db, schema)
+    dark = QueryService(db, schema, tracing=False)
+    for q in (FIG1, FAMILY[1]):
+        a, b = traced.submit(q), dark.submit(q)
+        assert a.error is None and b.error is None
+        assert set(a.values) == set(b.values)
+        for k in a.values:
+            assert np.array_equal(np.asarray(a.values[k]),
+                                  np.asarray(b.values[k]))
+    assert dark.obs.traces() == []
+    assert dark.metrics_v2()["histograms"] == {}
+    # counters still work when tracing is off (they are correctness
+    # bookkeeping, not observability sugar)
+    assert dark.metrics()["requests"] == 2
+
+
+def test_metrics_v2_shape_and_flat_view_equivalence(tpch):
+    db, schema = tpch
+    svc = QueryService(db, schema)
+    svc.submit_many(FAMILY)
+    v2 = svc.metrics_v2()
+    assert set(v2) == {"counters", "gauges", "histograms"}
+    for stage in ("parse", "fingerprint", "plan", "pad", "compile", "run",
+                  "request"):
+        h = v2["histograms"][stage]
+        assert h["count"] >= 1
+        assert h["p50_s"] <= h["p95_s"] <= h["p99_s"]
+    flat = svc.metrics()
+    for k, v in v2["counters"].items():
+        assert k in flat
+    for k in ("queue_depth", "queue_depth_peak", "padded_relations"):
+        assert k in flat
+    # legacy keys the older flat dict promised
+    for k in ("requests", "compiles", "dedup_saved", "plan_hits",
+              "persist_hits", "async_requests", "rejected"):
+        assert k in flat
+
+
+def test_metrics_snapshot_invariants_under_threads(tpch):
+    """The single-lock snapshot can never tear: every read must satisfy
+    the program-order invariants (a request is counted before anything it
+    causes), which the old three-lock metrics() could violate."""
+    db, schema = tpch
+    svc = QueryService(db, schema)
+    svc.submit_many(FAMILY)  # warm the caches first
+    stop = threading.Event()
+    violations = []
+
+    def reader():
+        while not stop.is_set():
+            c = svc.metrics_v2()["counters"]
+            for dep in ("fused_queries", "dedup_saved", "eager_requests",
+                        "request_errors"):
+                if c[dep] > c["requests"]:
+                    violations.append(f"{dep}={c[dep]} > "
+                                      f"requests={c['requests']}")
+
+    def writer():
+        for _ in range(15):
+            svc.submit_many(FAMILY)
+            svc.submit(FIG1)
+
+    readers = [threading.Thread(target=reader) for _ in range(2)]
+    writers = [threading.Thread(target=writer) for _ in range(3)]
+    for t in readers + writers:
+        t.start()
+    for t in writers:
+        t.join()
+    stop.set()
+    for t in readers:
+        t.join()
+    assert not violations
+
+
+# ---------------------------------------------------------------------------
+# export + explain
+# ---------------------------------------------------------------------------
+def test_export_chrome_trace_valid_and_deduped(tpch, tmp_path):
+    db, schema = tpch
+    svc = QueryService(db, schema, clock=FakeClock(1e-3))
+    svc.submit_many(FAMILY)
+    out = tmp_path / "trace.json"
+    n = svc.export_trace(out)
+    doc = json.loads(out.read_text())
+    assert set(doc) == {"traceEvents", "displayTimeUnit"}
+    events = doc["traceEvents"]
+    assert len(events) == n > 0
+    for ev in events:
+        assert ev["ph"] == "X"
+        assert ev["dur"] >= 0 and isinstance(ev["ts"], float)
+        assert {"name", "pid", "tid", "cat", "args"} <= set(ev)
+        # args must already be JSON-scalar (Perfetto chokes otherwise)
+        for v in ev["args"].values():
+            assert isinstance(v, (str, int, float, bool, type(None)))
+    # the fused compile span is emitted exactly once
+    assert sum(1 for ev in events if ev["name"] == "compile") == 1
+    assert sum(1 for ev in events if ev["name"] == "request") == len(FAMILY)
+
+
+def test_explain_names_cache_levels_and_sources(tpch):
+    db, schema = tpch
+    svc = QueryService(db, schema)
+    cold = svc.explain(FIG1)
+    assert cold["plan_source"] == "built"
+    assert cold["exec_source"] == "compiled"
+    warm = svc.explain(FIG1)
+    assert warm["plan_source"] == "memory"
+    assert warm["exec_source"] == "exec_cache"
+    assert warm["cache_levels"]["plan_in_memory"] is True
+    assert warm["cache_levels"]["exec_in_memory"] is True
+    assert warm["fingerprint"] == cold["fingerprint"]
+    assert warm["timings_s"]["total"] >= warm["timings_s"]["run"] >= 0
+    assert "in-memory=True" in warm["text"]
+
+
+# ---------------------------------------------------------------------------
+# BENCH recorder schema
+# ---------------------------------------------------------------------------
+def test_recorder_roundtrip_and_validator(tmp_path, capsys):
+    path = tmp_path / "BENCH_test.json"
+    rec = Recorder("test", path=str(path))
+    rec.add_meta(scale=1)
+    rec.section("s1")
+    rec.row("a.b", 12.5, "d=1")
+    rec.row("a.skipped", float("nan"), "not run")
+    rec.add_histograms({"run": Histogram().snapshot()})
+    rec.add_metrics({"requests": 3})
+    doc = rec.finish()
+    assert validate_bench(doc) == []
+    on_disk = json.loads(path.read_text())
+    assert on_disk["rows"][0]["us_per_call"] == 12.5
+    assert on_disk["rows"][1]["us_per_call"] is None  # NaN -> null
+    assert recorder_main([str(path)]) == 0
+    out = capsys.readouterr().out
+    assert "a.b,12.5,d=1" in out and "a.skipped,nan,not run" in out
+
+
+def test_validator_rejects_malformed_documents():
+    assert validate_bench([]) == ["document is not a JSON object"]
+    bad = {"bench_schema_version": 99, "benchmark": "", "created_unix": "x",
+           "rows": [{"name": "", "us_per_call": float("nan")}],
+           "histograms": {"run": {"count": -1}}, "metrics": [], "meta": {}}
+    probs = validate_bench(bad)
+    assert len(probs) >= 6
+    rec = Recorder("t", path="/nonexistent-dir/x.json")
+    with pytest.raises(ValueError):
+        rec.finish()  # no rows -> invalid, refused before any write
+
+
+# ---------------------------------------------------------------------------
+# clock-discipline lint
+# ---------------------------------------------------------------------------
+def test_lint_forbids_perf_counter_in_serving_tier(tmp_path):
+    repo = pathlib.Path(__file__).resolve().parent.parent
+    svc_dir = tmp_path / "src" / "repro" / "service"
+    svc_dir.mkdir(parents=True)
+    (svc_dir / "rogue.py").write_text(
+        "import time\nT0 = time.perf_counter()\n")
+    (svc_dir / "observability.py").write_text(
+        "import time\nMONOTONIC = time.perf_counter\n")
+    (svc_dir / "ok.py").write_text("import time\nW = time.monotonic()\n")
+    proc = subprocess.run(
+        [sys.executable, str(repo / "scripts" / "lint.py"),
+         str(tmp_path / "src")],
+        capture_output=True, text=True)
+    assert proc.returncode != 0
+    assert "rogue.py" in proc.stdout
+    assert "observability.py" not in proc.stdout
+    assert "ok.py" not in proc.stdout
+    # the real serving tier is clean
+    proc = subprocess.run(
+        [sys.executable, str(repo / "scripts" / "lint.py"),
+         str(repo / "src" / "repro" / "service")],
+        capture_output=True, text=True, cwd=repo)
+    assert proc.returncode == 0, proc.stdout + proc.stderr
