@@ -39,13 +39,23 @@ measures the properties the serving tier exists for:
      tables cannot flake the gate); the traced service's per-stage
      latency histograms (p50/p95/p99) feed the ``--record`` trajectory.
 
+  9. MESH serving: a database 4× larger than any other scenario here,
+     served by ``QueryService(mesh=...)`` on 8 devices (forced host
+     devices in a subprocess).  Answers must be bitwise-identical to a
+     single-device service padded to the same capacities (the
+     ``min_bucket = n_shards × mesh_min_bucket`` identity), individually
+     AND fused; within-bucket per-shard growth must cause zero
+     recompiles; and a warm restart over the shared ``cache_dir`` must
+     re-plan nothing (``plan_builds == 0``) — the same serving
+     guarantees, one graph interpreter, beyond one device.
+
 ``--smoke`` runs only the fused-batching + mixed-shape + async + restart
-+ observability scenarios on tiny tables and asserts cache/fusion/
-scheduler/persistence counters and answer identity (plus the tracing
-overhead gate) — what ``scripts/verify.sh --smoke`` runs so serving
-regressions fail CI fast.  ``--record [PATH]`` writes a schema-versioned
-``BENCH_serving.json`` (rows + per-stage histogram snapshots + counters;
-validated by ``python -m benchmarks.recorder``).
++ observability + mesh scenarios on tiny tables and asserts cache/
+fusion/scheduler/persistence counters and answer identity (plus the
+tracing overhead gate) — what ``scripts/verify.sh --smoke`` runs so
+serving regressions fail CI fast.  ``--record [PATH]`` writes a
+schema-versioned ``BENCH_serving.json`` (rows + per-stage histogram
+snapshots + counters; validated by ``python -m benchmarks.recorder``).
 """
 
 from __future__ import annotations
@@ -656,6 +666,148 @@ def check_restart(rr: dict) -> list[str]:
     return fails
 
 
+# ---- mesh scenario: serving beyond one device ------------------------------
+# A database 4× larger than any other scenario, sharded row-wise over an
+# 8-device mesh behind the SAME QueryService surface.  Runs in a
+# subprocess because the fake host device count must be fixed before jax
+# initialises (XLA_FLAGS), like the tests' differential helpers.  The
+# single-device reference uses min_bucket = 8 × the mesh's min_bucket:
+# for a power-of-two shard count, sharded per-shard buckets and one big
+# local bucket round to IDENTICAL global capacities, so mesh answers must
+# match the local service to the bit.
+
+MESH_DEVICES = 8
+MESH_SCALE_FACTOR = 4    # mesh db is 4× the other scenarios' scale
+MESH_MIN_BUCKET = 8
+
+
+def run_mesh_child(cache_dir: str, scale: int, seed: int) -> dict:
+    """One mesh serving process: shard the db over all devices, serve the
+    distinct mix individually + fused, grow a relation within its
+    per-shard bucket, and report answers/counters as JSON on stdout."""
+    if jax.device_count() != MESH_DEVICES:
+        raise RuntimeError(f"expected {MESH_DEVICES} devices, got "
+                           f"{jax.device_count()} (XLA_FLAGS not set?)")
+    t0 = time.perf_counter()
+    db, schema = make_tpch_db(scale=scale, seed=seed)
+    mesh = jax.make_mesh((MESH_DEVICES,), ("data",))
+    svc = QueryService(db, schema, mesh=mesh, cache_dir=cache_dir,
+                       min_bucket=MESH_MIN_BUCKET)
+    # identically-padded single-device reference (no cache_dir: its
+    # store partition would be separate anyway — see topology keys)
+    ref = QueryService(db, schema,
+                       min_bucket=MESH_MIN_BUCKET * MESH_DEVICES)
+
+    answers, ref_answers = {}, {}
+    for name, sql in DISTINCT_QUERIES:
+        r = svc.submit(sql)
+        if r.error is not None:
+            raise RuntimeError(f"{name} failed on mesh: {r.error!r}")
+        answers[name] = _encode_values(r.values)
+        ref_answers[name] = _encode_values(ref.submit(sql).values)
+    fused = svc.submit_many([sql for _, sql in DISTINCT_QUERIES])
+    fused_answers = {name: _encode_values(r.values)
+                     for (name, _), r in zip(DISTINCT_QUERIES, fused)}
+    wall_s = time.perf_counter() - t0
+
+    # within-bucket growth on the sharded service: zero recompiles, and
+    # the answers keep tracking the reference bit-for-bit
+    compiles_before = svc.metrics()["compiles"]
+    tab = db["partsupp"]
+    rng = np.random.default_rng(seed + 1)
+    extra = MESH_DEVICES * 4
+    cols = {}
+    for cname, col in tab.columns.items():
+        base = np.asarray(col)
+        cols[cname] = np.concatenate(
+            [base, base[rng.integers(0, len(base), extra)]])
+    grown = Table.from_numpy(cols)
+    svc.update_table("partsupp", grown)
+    ref.update_table("partsupp", grown)
+    growth_identical = _values_equal(svc.submit(COSTLY_PARTS).values,
+                                     ref.submit(COSTLY_PARTS).values)
+
+    m = svc.metrics()
+    gauges = svc.metrics_v2()["gauges"]
+    return {"wall_s": wall_s, "scale": scale,
+            "answers": answers, "ref_answers": ref_answers,
+            "fused_answers": fused_answers,
+            "growth_rows": extra,
+            "growth_recompiles": m["compiles"] - compiles_before,
+            "growth_identical": growth_identical,
+            "plan_builds": m["plan_builds"],
+            "compiles": m["compiles"],
+            "persist_hits": m["persist_hits"],
+            "persist_writes": m["persist_writes"],
+            "mesh_devices": gauges.get("mesh_devices", 0),
+            "mesh_shards": gauges.get("mesh_shard_count_data", 0)}
+
+
+def _spawn_mesh_child(cache_dir: str, scale: int, seed: int) -> dict:
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = src + (os.pathsep + env["PYTHONPATH"]
+                               if env.get("PYTHONPATH") else "")
+    env["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count="
+                        f"{MESH_DEVICES}")
+    proc = subprocess.run(
+        [sys.executable, os.path.abspath(__file__), "--mesh-child",
+         cache_dir, "--scale", str(scale), "--seed", str(seed)],
+        capture_output=True, text=True, env=env, timeout=900)
+    if proc.returncode != 0:
+        raise RuntimeError(f"mesh child failed:\n{proc.stderr[-2000:]}")
+    return json.loads(proc.stdout.strip().splitlines()[-1])
+
+
+def run_mesh(scale: int = 1000, seed: int = 0) -> dict:
+    """Cold + warm mesh serving processes over one cache_dir, at
+    ``MESH_SCALE_FACTOR ×`` the surrounding benchmark's scale."""
+    mesh_scale = scale * MESH_SCALE_FACTOR
+    cache_dir = tempfile.mkdtemp(prefix="serving-mesh-cache-")
+    try:
+        cold = _spawn_mesh_child(cache_dir, mesh_scale, seed)
+        warm = _spawn_mesh_child(cache_dir, mesh_scale, seed)
+    finally:
+        shutil.rmtree(cache_dir, ignore_errors=True)
+    return {"queries": len(DISTINCT_QUERIES), "scale": mesh_scale,
+            "cold": cold, "warm": warm}
+
+
+def check_mesh(rx: dict) -> list[str]:
+    """Gate the mesh scenario; returns failures."""
+    fails = []
+    cold, warm = rx["cold"], rx["warm"]
+    if cold["mesh_devices"] != MESH_DEVICES \
+            or cold["mesh_shards"] != MESH_DEVICES:
+        fails.append(f"mesh gauges report {cold['mesh_devices']} devices / "
+                     f"{cold['mesh_shards']} shards, expected "
+                     f"{MESH_DEVICES}")
+    if cold["answers"] != cold["ref_answers"]:
+        fails.append("mesh answers differ bitwise from the identically-"
+                     "padded single-device service")
+    if cold["fused_answers"] != cold["answers"]:
+        fails.append("fused mesh answers differ from individual mesh "
+                     "serving")
+    if cold["growth_recompiles"] != 0:
+        fails.append(f"within-bucket growth on the mesh caused "
+                     f"{cold['growth_recompiles']} recompiles")
+    if not cold["growth_identical"]:
+        fails.append("post-growth mesh answers diverged from the "
+                     "reference")
+    if warm["plan_builds"] != 0:
+        fails.append(f"warm mesh process rebuilt {warm['plan_builds']} "
+                     "plans — the store's topology partition is not "
+                     "warm-starting")
+    if warm["persist_hits"] != rx["queries"]:
+        fails.append(f"warm mesh persist_hits={warm['persist_hits']} != "
+                     f"{rx['queries']} distinct fingerprints")
+    if warm["answers"] != cold["answers"]:
+        fails.append("warm mesh answers are not bitwise-identical to the "
+                     "cold process")
+    return fails
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--tiny", action="store_true",
@@ -670,6 +822,10 @@ def main(argv=None):
                     help="internal: run one restart-scenario serving "
                          "process against CACHE_DIR and print its JSON "
                          "report")
+    ap.add_argument("--mesh-child", metavar="CACHE_DIR", default=None,
+                    help="internal: run one mesh serving process (needs "
+                         "XLA_FLAGS forcing 8 host devices) against "
+                         "CACHE_DIR and print its JSON report")
     ap.add_argument("--record", nargs="?", const="BENCH_serving.json",
                     default=None, metavar="PATH",
                     help="write a schema-versioned perf trajectory "
@@ -685,6 +841,10 @@ def main(argv=None):
     if args.restart_child is not None:
         print(json.dumps(run_restart_child(args.restart_child, scale,
                                            args.seed)))
+        return 0
+    if args.mesh_child is not None:
+        print(json.dumps(run_mesh_child(args.mesh_child, scale,
+                                        args.seed)))
         return 0
 
     from benchmarks.recorder import Recorder
@@ -808,6 +968,30 @@ def main(argv=None):
     rec.add_histograms(ro["histograms"])
     rec.add_metrics(ro["metrics"])
     fused_fails += check_overhead(ro)
+
+    rx = run_mesh(scale=scale, seed=args.seed)
+    cold, warm = rx["cold"], rx["warm"]
+    print(f"mesh serving      {rx['queries']} distinct queries at scale="
+          f"{rx['scale']} ({MESH_SCALE_FACTOR}× everything above) over "
+          f"{cold['mesh_devices']} devices")
+    print(f"  cold process    {cold['wall_s'] * 1e3:>10.1f} ms "
+          f"(plan_builds={cold['plan_builds']}, "
+          f"compiles={cold['compiles']}, "
+          f"persist_writes={cold['persist_writes']})")
+    print(f"  warm process    {warm['wall_s'] * 1e3:>10.1f} ms "
+          f"(plan_builds={warm['plan_builds']}, "
+          f"persist_hits={warm['persist_hits']})")
+    print(f"  bitwise-vs-local={cold['answers'] == cold['ref_answers']} "
+          f"fused-identical={cold['fused_answers'] == cold['answers']} "
+          f"growth +{cold['growth_rows']} rows → "
+          f"{cold['growth_recompiles']} recompiles")
+    rec.row("serving.mesh.cold", cold["wall_s"] * 1e6,
+            f"scale={rx['scale']};devices={cold['mesh_devices']};"
+            f"plan_builds={cold['plan_builds']}")
+    rec.row("serving.mesh.warm", warm["wall_s"] * 1e6,
+            f"plan_builds={warm['plan_builds']};"
+            f"persist_hits={warm['persist_hits']}")
+    fused_fails += check_mesh(rx)
 
     if args.smoke:
         rec.finish()

@@ -106,6 +106,30 @@ def _clock_discipline(paths: list[str]) -> int:
     return 1 if failures else 0
 
 
+def _shard_map_discipline(paths: list[str]) -> int:
+    """Forbid ``shard_map`` imports in ``src/`` outside
+    ``core/distributed.py``.  The mesh lowering is ONE place — the graph
+    interpreter's ring evaluators behind ``DistributedExecutor`` — so
+    every other layer (service, planner, tables) stays
+    topology-agnostic and single-device code never grows a second,
+    subtly-different collective path.  Tests and benchmarks are exempt
+    (they exercise the public surface).  Always runs, even when
+    ruff/pyflakes handle the general lint."""
+    failures = 0
+    pat = re.compile(r"import\s+shard_map|shard_map\s*=|"
+                     r"from\s+\S*shard_map|jax\.experimental\.shard_map")
+    for f in _py_files(paths):
+        parts = f.parts
+        if "src" not in parts or f.name == "distributed.py":
+            continue
+        for ln, line in enumerate(f.read_text().splitlines(), start=1):
+            if pat.search(line.split("#")[0]):
+                print(f"{f}:{ln}: shard_map outside core/distributed.py — "
+                      "mesh lowering lives in DistributedExecutor only")
+                failures += 1
+    return 1 if failures else 0
+
+
 def _builtin_lint(paths: list[str]) -> int:
     print("lint: ruff/pyflakes not installed — built-in syntax + "
           "unused-import check")
@@ -133,12 +157,13 @@ def _builtin_lint(paths: list[str]) -> int:
 def main(argv: list[str]) -> int:
     paths = argv or [p for p in DEFAULT_PATHS if pathlib.Path(p).exists()]
     clock_rc = _clock_discipline(paths)
+    shard_rc = _shard_map_discipline(paths)
     rc = _external(["ruff", "check"], paths)
     if rc is None:
         rc = _external(["pyflakes"], paths)
     if rc is None:
         rc = _builtin_lint(paths)
-    rc = rc or clock_rc
+    rc = rc or clock_rc or shard_rc
     print("lint: OK" if rc == 0 else "lint: FAIL")
     return rc
 

@@ -19,7 +19,16 @@
 #                                # AND the tracing-overhead scenario
 #                                # (tracing-on answers bitwise-identical to
 #                                # tracing-off, warm overhead bounded, all
-#                                # pipeline-stage histograms populated).
+#                                # pipeline-stage histograms populated),
+#                                # AND the mesh-serving scenario (a 4×-scale
+#                                # db through QueryService(mesh=...) on 8
+#                                # forced host devices: answers bitwise-
+#                                # identical to an identically-padded
+#                                # single-device service, individually and
+#                                # fused; zero recompiles on within-bucket
+#                                # per-shard growth; warm restart with
+#                                # plan_builds == 0 from the topology-keyed
+#                                # store partition).
 #                                # Writes + schema-validates the
 #                                # BENCH_serving.json perf trajectory.
 set -euo pipefail
@@ -31,7 +40,7 @@ echo "== lint (ruff/pyflakes, or built-in fallback) =="
 python scripts/lint.py
 
 if [[ "${1:-}" == "--smoke" ]]; then
-  echo "== smoke: fused + mixed + async + restart + tracing gates =="
+  echo "== smoke: fused + mixed + async + restart + tracing + mesh gates =="
   python benchmarks/serving_queries.py --smoke --record BENCH_serving.json
   echo "== smoke: BENCH_serving.json schema check =="
   python -m benchmarks.recorder BENCH_serving.json

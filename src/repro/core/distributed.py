@@ -24,9 +24,22 @@ same ring in the Boolean semiring (max instead of +).
 Multi-pod: the ring nests — a full `data`-ring per `pod` step — so
 inter-pod (DCI) hops happen once per pod, not once per shard.
 
-Final aggregates run *outside* the shard_map on row-sharded root columns;
-jnp reductions over sharded arrays let XLA insert the psum/all-gather, and
-grouping reuses the same segmented machinery.
+There is ONE plan interpreter: ``DistributedExecutor`` subclasses
+``core.executor.Executor`` and reuses its node-keyed graph traversal
+(``_trace_plan``) verbatim — the mesh lowering only swaps the node
+evaluator (``_RingExecutor``: semi/freq joins become ring sweeps) and
+runs the traversal inside one ``shard_map`` program per compile, stopping
+at the pre-aggregate root state.  Content-key memoisation, sub-DAG dedup
+and ``compile_multi`` fusion therefore work unchanged on the mesh: a
+fused multi-query mesh program runs every shared sub-DAG's ring sweep
+exactly once.
+
+Final aggregates run *outside* the shard_map, on the root columns
+constrained to a REPLICATED layout: the sweep's exact integer frequencies
+are identical to the local engine's, and aggregating replicated arrays
+executes the same single-device reduction program on every device — which
+is what makes mesh answers bitwise-equal to a single-device reference over
+identically-padded tables (see ``tables.table.sharded_bucket_capacity``).
 """
 
 from __future__ import annotations
@@ -46,16 +59,18 @@ if _shard_map is None:  # pragma: no cover - version-dependent
 # shard_map every value is already device-varying, so it's the identity
 _pvary = getattr(lax, "pvary", lambda x, axes: x)
 
-from repro.core.aggregates import scalar_aggregate
+from repro.core.executor import Executor, _State
 from repro.core.plan import (
-    FinalAggOp,
     FreqJoinOp,
-    MaterializeJoinOp,
     PhysicalPlan,
-    ScanOp,
+    PlanNode,
     SemiJoinOp,
 )
-from repro.tables.table import Schema, Table, pack_keys
+from repro.tables.table import (
+    Schema,
+    Table,
+    sharded_bucket_capacity,
+)
 
 
 def _local_multiplier(pk, ck, cf, mode: str):
@@ -167,126 +182,205 @@ def allreduce_freq_join(pk, pf, ck, cf, *, ring_axes: Sequence[str],
     return pf * mult
 
 
-class DistributedExecutor:
-    """Executes oma/opt_plus plans with row-sharded tables.
+def shard_table(table: Table, sharding) -> Table:
+    """Place every column (and freq) of `table` under `sharding`."""
+    cols = {c: jax.device_put(a, sharding) for c, a in table.columns.items()}
+    return Table(cols, jax.device_put(table.freq, sharding))
 
-    Tables are sharded on rows over `data_axes` (e.g. ("pod", "data") on the
-    production mesh); the bottom-up sweep runs in one shard_map program with
-    Ring-FreqJoins; final aggregation runs on the sharded root columns under
-    jit (XLA inserts the cross-shard reductions).
+
+class _RingExecutor(Executor):
+    """Per-shard node evaluator: the ``Executor`` semantics with semi/freq
+    joins replaced by ring (or dense-domain all-reduce) sweeps over the
+    mesh axes.  Instantiated by ``DistributedExecutor._inner_executor``
+    inside its shard_map program — every other node type (scans, the
+    content-key memo, selection masking) is inherited unchanged, which is
+    the whole point: one interpreter, two lowerings."""
+
+    def __init__(self, db: dict[str, Table], schema: Schema, freq_dtype,
+                 ring_axes: Sequence[str], presort: bool,
+                 dense_domain: bool):
+        super().__init__(db, schema, freq_dtype,
+                         dense_domain=dense_domain)
+        self.ring_axes = tuple(ring_axes)
+        self.presort = presort
+
+    def _key(self, plan, alias, st, on_vars):
+        key, dom = super()._key(plan, alias, st, on_vars)
+        if dom is not None and dom >= (1 << 31):
+            # the all-reduce variant scatter-adds into a domain-sized
+            # accumulator per shard — cap it at int32 indexing range and
+            # fall back to the ring
+            dom = None
+        return key, dom
+
+    def _ring(self, pk, pf, ck, cf, cdom, mode: str):
+        if cdom is not None:
+            return allreduce_freq_join(pk, pf, ck, cf,
+                                       ring_axes=self.ring_axes,
+                                       mode=mode, domain=cdom)
+        return ring_freq_join(pk, pf, ck, cf, ring_axes=self.ring_axes,
+                              mode=mode, presort=self.presort)
+
+    def _semi_join(self, plan, op: SemiJoinOp, p: _State,
+                   c: _State) -> _State:
+        pk, _pd = self._key(plan, op.parent, p, op.on_vars)
+        ck, cdom = self._key(plan, op.child, c, op.on_vars)
+        return _State(p.cols, self._ring(pk, p.freq, ck, c.freq, cdom,
+                                         "any"))
+
+    def _freq_join(self, plan, op: FreqJoinOp, p: _State,
+                   c: _State) -> _State:
+        # op.pregroup (pre-summing duplicate child keys) is a local-engine
+        # micro-optimisation; the ring accumulates exact per-shard sums
+        # anyway, so it is ignored — identical integers by the semiring law
+        pk, _pd = self._key(plan, op.parent, p, op.on_vars)
+        ck, cdom = self._key(plan, op.child, c, op.on_vars)
+        return _State(p.cols, self._ring(pk, p.freq, ck, c.freq, cdom,
+                                         "sum"))
+
+    def _final_agg(self, plan, op, st):  # pragma: no cover — guarded
+        raise TypeError("final aggregation must not run per-shard; "
+                        "DistributedExecutor aggregates outside shard_map")
+
+
+class DistributedExecutor(Executor):
+    """The graph interpreter lowered onto a device mesh.
+
+    Tables are row-sharded over `data_axes` (e.g. ("pod", "data") on the
+    production mesh).  ``compile``/``compile_multi`` emit ONE jitted
+    program per call: the inherited ``_trace_plan`` traversal runs inside
+    a single ``shard_map`` with ``_RingExecutor`` as the node evaluator —
+    every semi/freq join a ring sweep, every memo hit shared across member
+    plans — evaluated up to each plan's pre-aggregate root state; final
+    aggregation then runs outside the shard_map on replicated root
+    columns, so answers are bitwise-equal to a single-device run over the
+    same padded capacities.
     """
 
     def __init__(self, schema: Schema, mesh: jax.sharding.Mesh,
                  data_axes: Sequence[str] = ("data",),
                  freq_dtype=jnp.int32, presort: bool = False,
-                 dense_domain: bool = False):
-        self.schema = schema
+                 dense_domain: bool = False,
+                 span_hook=None, profile_annotations: bool = False):
+        super().__init__({}, schema, freq_dtype,
+                         dense_domain=dense_domain, span_hook=span_hook,
+                         profile_annotations=profile_annotations)
         self.mesh = mesh
         self.data_axes = tuple(data_axes)
-        self.freq_dtype = freq_dtype
         self.presort = presort
-        self.dense_domain = dense_domain
+
+    def jittable(self) -> "DistributedExecutor":
+        return self          # never carries eager-only options
 
     # -- sharding helpers --------------------------------------------------
+    @property
+    def n_shards(self) -> int:
+        n = 1
+        for a in self.data_axes:
+            n *= self.mesh.shape[a]
+        return n
+
+    def topology(self) -> tuple[tuple[str, ...], tuple[int, ...]]:
+        """(axis names, shard counts) — the shape-relevant mesh identity
+        the serving tier folds into its executable-cache keys."""
+        return (self.data_axes,
+                tuple(self.mesh.shape[a] for a in self.data_axes))
+
     def row_sharding(self):
         return jax.sharding.NamedSharding(
             self.mesh, jax.sharding.PartitionSpec(self.data_axes))
 
-    def shard_db(self, db: dict[str, Table]) -> dict[str, Table]:
-        """Pad each table to a multiple of the ring size and shard rows."""
-        n_shards = 1
-        for a in self.data_axes:
-            n_shards *= self.mesh.shape[a]
-        out = {}
+    def replicated_sharding(self):
+        return jax.sharding.NamedSharding(
+            self.mesh, jax.sharding.PartitionSpec())
+
+    def shard_capacity(self, n_rows: int, min_bucket: int = 8) -> int:
+        """Global padded capacity for an n-row table on this mesh: each
+        shard gets a power-of-two block, so within-bucket per-shard growth
+        never changes the compiled program's shapes."""
+        return sharded_bucket_capacity(n_rows, self.n_shards, min_bucket)
+
+    def shard_db(self, db: dict[str, Table],
+                 min_bucket: int = 8) -> dict[str, Table]:
+        """Pad each table to its per-shard power-of-two bucket
+        (``sharded_bucket_capacity``) and shard rows over the mesh."""
         sh = self.row_sharding()
-        for name, t in db.items():
-            cap = ((t.capacity + n_shards - 1) // n_shards) * n_shards
-            cols = {}
-            for c, arr in t.columns.items():
-                pad = jnp.zeros((cap - t.capacity,) + arr.shape[1:], arr.dtype)
-                cols[c] = jax.device_put(jnp.concatenate([arr, pad]), sh)
-            freq = jax.device_put(
-                jnp.concatenate([t.freq,
-                                 jnp.zeros((cap - t.capacity,), t.freq.dtype)]),
-                sh)
-            out[name] = Table(cols, freq)
-        return out
+        return {name: shard_table(t.pad_to(self.shard_capacity(t.capacity,
+                                                               min_bucket)),
+                                  sh)
+                for name, t in db.items()}
 
-    # -- plan execution -----------------------------------------------------
-    def compile(self, plan: PhysicalPlan):
-        if any(isinstance(op, MaterializeJoinOp) for op in plan.ops):
-            raise ValueError("distributed execution supports the "
-                             "zero-materialisation plan classes (oma/opt_plus)")
-        schema = self.schema
-        freq_dtype = self.freq_dtype
-        data_axes = self.data_axes
+    # -- plan execution ----------------------------------------------------
+    def _inner_executor(self, db: dict[str, Table]) -> Executor:
+        return _RingExecutor(db, self.schema, self.freq_dtype,
+                             self.data_axes, self.presort,
+                             self.dense_domain)
 
-        def domains(alias):
-            atom = plan.tree.atoms[alias]
-            rel = schema.relations[atom.rel]
-            return {v: rel.columns[i].domain
-                    for i, v in enumerate(atom.vars)}
+    @staticmethod
+    def _agg_state_node(plan: PhysicalPlan) -> PlanNode:
+        """The pre-aggregate root state — where the shard_map stops."""
+        return plan.root.inputs[0]
 
-        def key_of(alias, cols, freq, on_vars):
-            if not on_vars:
-                return jnp.zeros(freq.shape, jnp.int32), 1
-            doms = domains(alias)
-            dlist = [doms.get(v) for v in on_vars]
-            key = pack_keys([cols[v] for v in on_vars], dlist)
-            dom = None
-            if self.dense_domain and all(d is not None for d in dlist):
-                dom = 1
-                for d in dlist:
-                    dom *= d
-                if dom >= (1 << 31):
-                    dom = None
-            return key, dom
+    @staticmethod
+    def _agg_cols(plan: PhysicalPlan) -> set[str]:
+        """Root-state columns the final aggregate actually reads; only
+        these leave the shard_map (smaller out-specs, nothing else is
+        gathered)."""
+        op = plan.root.op
+        need = set(op.group_by)
+        for ag in op.aggregates:
+            if ag.var is not None:
+                need.add(ag.var)
+        return need
 
-        final: FinalAggOp = next(op for op in plan.ops
-                                 if isinstance(op, FinalAggOp))
+    def _ring_program(self, plans: list[PhysicalPlan]):
+        """db → [result dict per plan]: one shard_map sweep evaluating
+        every member to its root state (shared trace memo, exactly like
+        the local ``compile_multi``), then replicated final aggregation."""
+        spec = jax.sharding.PartitionSpec(self.data_axes)
+        rep = self.replicated_sharding()
 
         def sweep(db: dict[str, Table]):
-            """Runs per-shard under shard_map; returns root cols + freq."""
-            state: dict[str, tuple[dict, jax.Array]] = {}
-            for op in plan.ops:
-                if isinstance(op, ScanOp):
-                    t = db[op.rel]
-                    if op.selection is not None:
-                        t = t.select(op.selection)
-                    atom = plan.tree.atoms[op.alias]
-                    rel = schema.relations[atom.rel]
-                    cols = {atom.vars[i]: t.columns[c]
-                            for i, c in enumerate(rel.column_names())}
-                    state[op.alias] = (cols, t.freq.astype(freq_dtype))
-                elif isinstance(op, (SemiJoinOp, FreqJoinOp)):
-                    pcols, pf = state[op.parent]
-                    ccols, cf = state[op.child]
-                    pk, _pd = key_of(op.parent, pcols, pf, op.on_vars)
-                    ck, cdom = key_of(op.child, ccols, cf, op.on_vars)
-                    mode = "any" if isinstance(op, SemiJoinOp) else "sum"
-                    if cdom is not None:
-                        pf = allreduce_freq_join(pk, pf, ck, cf,
-                                                 ring_axes=data_axes,
-                                                 mode=mode, domain=cdom)
-                    else:
-                        pf = ring_freq_join(pk, pf, ck, cf,
-                                            ring_axes=data_axes, mode=mode,
-                                            presort=self.presort)
-                    state[op.parent] = (pcols, pf)
-                elif isinstance(op, FinalAggOp):
-                    pass
-            return state[plan.tree.root]
-
-        in_specs = jax.sharding.PartitionSpec(data_axes)
+            memo: dict = {}
+            outs = []
+            for plan in plans:
+                st = self._trace_plan(db, plan, memo,
+                                      root=self._agg_state_node(plan))
+                need = self._agg_cols(plan)
+                outs.append(({v: c for v, c in st.cols.items()
+                              if v in need}, st.freq))
+            return outs
 
         def run(db: dict[str, Table]):
-            specs = jax.tree.map(lambda _: in_specs, db)
-            cols, freq = _shard_map(
-                sweep, mesh=self.mesh, in_specs=(specs,),
-                out_specs=in_specs)(db)
-            out = {}
-            for ag in final.aggregates:
-                out[ag.name] = scalar_aggregate(ag, cols, freq, final.dedup)
-            return out
+            specs = jax.tree.map(lambda _: spec, db)
+            outs = _shard_map(sweep, mesh=self.mesh, in_specs=(specs,),
+                              out_specs=spec)(db)
+            results = []
+            for plan, (cols, freq) in zip(plans, outs):
+                # replicate the (exact, order-independent) sweep output so
+                # the aggregate program is the single-device one on every
+                # device — bitwise parity with the local executor
+                cols = {v: jax.lax.with_sharding_constraint(c, rep)
+                        for v, c in cols.items()}
+                freq = jax.lax.with_sharding_constraint(freq, rep)
+                results.append(self._final_agg(plan, plan.root.op,
+                                               _State(cols, freq)))
+            return results
 
-        return jax.jit(run)
+        return run
+
+    def compile(self, plan: PhysicalPlan):
+        """Jit one plan's ring program: sharded db → aggregates."""
+        self._check_jittable([plan])
+        run = self._ring_program([plan])
+        return self._wrap_jitted(jax.jit(lambda db: run(db)[0]),
+                                 "executor.run")
+
+    def compile_multi(self, plans: list[PhysicalPlan]):
+        """Jit several plans into ONE mesh program (shared ring sweeps):
+        sharded db → [aggregates], results in plan order."""
+        if not plans:
+            raise ValueError("compile_multi needs at least one plan")
+        self._check_jittable(plans)
+        return self._wrap_jitted(jax.jit(self._ring_program(list(plans))),
+                                 "executor.run_multi")

@@ -325,8 +325,20 @@ class Executor:
                 "execute() for guarded baselines, or build the Executor "
                 "without oom_guard to compile.")
 
+    def _inner_executor(self, db: dict[str, Table]) -> "Executor":
+        """The node evaluator ``_trace_plan`` traces with — a fresh
+        executor bound to the traced-through database.  Subclasses swap in
+        alternative evaluators here (``DistributedExecutor`` returns one
+        whose semi/freq joins are ring sweeps over the mesh); the traversal
+        itself — content-key memoisation, sub-DAG dedup, multi-plan fusion
+        — is shared and lives only in ``_trace_plan``."""
+        return Executor(db, self.schema, self.freq_dtype,
+                        self.backend, self.interpret,
+                        dense_domain=self.dense_domain)
+
     def _trace_plan(self, db: dict[str, Table], plan: PhysicalPlan,
-                    memo: dict | None = None) -> dict[str, Any]:
+                    memo: dict | None = None,
+                    root: PlanNode | None = None) -> Any:
         """One plan's DAG evaluation, for use under tracing.
 
         ``memo`` maps node content keys (``PlanNode.key``) to the frequency
@@ -335,10 +347,13 @@ class Executor:
         rebuilt — free) and skips tracing the node's kernels AND its entire
         child sub-DAG.  Shared across plans by ``compile_multi``, this is
         how a fused multi-query program runs each common sub-DAG exactly
-        once even when the member plans' overall join shapes differ."""
-        inner = Executor(db, self.schema, self.freq_dtype,
-                         self.backend, self.interpret,
-                         dense_domain=self.dense_domain)
+        once even when the member plans' overall join shapes differ.
+
+        ``root`` selects where evaluation stops (default: the whole plan,
+        ``plan.root``).  The mesh path evaluates to ``plan.root.inputs[0]``
+        — the pre-aggregate root state — inside its shard_map program and
+        aggregates outside, so the same traversal serves both lowerings."""
+        inner = self._inner_executor(db)
         vals: dict[int, _State] = {}
 
         def ev(node: PlanNode) -> Any:
@@ -372,7 +387,7 @@ class Executor:
             vals[id(node)] = st
             return st
 
-        return ev(plan.root)
+        return ev(plan.root if root is None else root)
 
     def compile(self, plan: PhysicalPlan):
         """Jit the static plan classes (oma / opt_plus): db → aggregates."""

@@ -80,6 +80,25 @@ caching and never attach an error to a request.  ``export_cache`` /
 ``import_cache`` move a warm cache between directories (e.g. to seed a
 fleet from one warmed pod).
 
+Serving beyond one device: ``QueryService(db, schema, mesh=...)`` puts
+the whole front door on a device mesh.  The jit executor becomes
+``repro.core.distributed.DistributedExecutor`` — the SAME op-graph
+interpreter lowered into one ``shard_map`` ring program per compile — so
+admission, fingerprinting, the plan cache, fusion grouping, async
+batching, fault isolation, persistence and tracing all flow through the
+code paths above unchanged.  What the mesh changes is shapes and keys:
+tables pad to per-shard power-of-two buckets
+(``sharded_bucket_capacity`` — growth on one shard never recompiles the
+mesh program) and padded views are placed row-sharded over the mesh;
+exec/fused cache keys and the persistent store fingerprint carry the
+shard topology ``(axis_names, shard_counts)`` so programs lowered for
+different meshes never alias; ``metrics_v2()`` gains mesh gauges and the
+``run`` span a ``ring_sweep`` child.  Answers are bitwise-equal to a
+single-device service padded to the same capacities (construct one with
+``min_bucket = n_shards * min_bucket`` for a power-of-two mesh).
+Eager-fallback (ref/opt) plans keep running locally on the unpadded
+tables — materialising baselines are not a mesh workload.
+
 Observability: every request carries a ``TraceSpan`` tree (admit/parse →
 queue-wait → fingerprint → plan → pad → compile → run) recorded through
 ``repro.service.observability`` — the ONLY timing source in this package
@@ -216,12 +235,19 @@ class QueryService:
                  cache_dir: str | None = None,
                  clock: Callable[[], float] | None = None,
                  tracing: bool = True,
-                 profile_annotations: bool = False):
+                 profile_annotations: bool = False,
+                 mesh: "jax.sharding.Mesh | None" = None,
+                 data_axes: tuple[str, ...] | None = None,
+                 mesh_presort: bool = False):
         self._db = dict(db)
         self.schema = schema
         self.mode = mode
         self.use_fkpk = use_fkpk
         self.min_bucket = min_bucket
+        # mesh serving: same pipeline, distributed jit executor (below),
+        # topology-aware cache keys, per-shard buckets, sharded views.
+        # min_bucket is PER SHARD on a mesh.
+        self._mesh = mesh
         # the one timing source for the whole serving tier: counters,
         # gauges, per-stage histograms, and per-request span trees.
         # tracing=False keeps counters/gauges but makes every span a no-op
@@ -249,21 +275,46 @@ class QueryService:
         ])
         self.obs.set_gauge("queue_depth", 0)
         self.obs.register_peak_gauge("queue_depth_peak", "queue_depth")
+        if mesh is not None:
+            from repro.core.distributed import DistributedExecutor
+
+            axes = tuple(data_axes) if data_axes is not None \
+                else tuple(mesh.axis_names)
+            self._jit_executor = DistributedExecutor(
+                schema, mesh, data_axes=axes, freq_dtype=freq_dtype,
+                presort=mesh_presort, dense_domain=dense_domain,
+                profile_annotations=profile_annotations)
+            # the shape-relevant mesh identity, folded into every
+            # executable-cache key and the persistent store fingerprint:
+            # a ring program compiled for one mesh shape must never answer
+            # a service sharded differently
+            self._topo = self._jit_executor.topology()
+            self._row_sharding = self._jit_executor.row_sharding()
+            self.obs.set_gauge("mesh_devices", self._jit_executor.n_shards)
+            for a, n in zip(*self._topo):
+                self.obs.set_gauge(f"mesh_shard_count_{a}", n)
+        else:
+            self._jit_executor = Executor(
+                self._db, schema, freq_dtype, backend, interpret,
+                dense_domain=dense_domain,
+                profile_annotations=profile_annotations)
+            self._topo = ()
+            self._row_sharding = None
         store = None
         if cache_dir is not None:
-            # the store identity covers schema AND planner configuration:
-            # plans are planner output, so a store warmed under another
-            # mode/use_fkpk must never serve this service
+            # the store identity covers schema AND planner configuration
+            # AND shard topology: plans are planner output, so a store
+            # warmed under another mode/use_fkpk must never serve this
+            # service, and a mesh config's warm-start state (incl. the XLA
+            # executable cache beside it) stays disjoint per topology
             store = PlanStore(cache_dir,
-                              store_fingerprint(schema, mode, use_fkpk))
+                              store_fingerprint(schema, mode, use_fkpk,
+                                                topology=self._topo))
             # executables warm-start through JAX's own persistent
             # compilation cache (process-global; see plan_store docs)
             enable_executable_cache(store.root / "xla")
         self.cache = PlanCache(plan_capacity, exec_capacity, fused_capacity,
                                padded_capacity, store=store)
-        self._jit_executor = Executor(self._db, schema, freq_dtype, backend,
-                                      interpret, dense_domain=dense_domain,
-                                      profile_annotations=profile_annotations)
         # fingerprint → (eager, prefix_key, subplans, sig): the fusion
         # identity is a pure function of the canonical structure, so
         # memoise it across batches (bounded: cleared when it outgrows the
@@ -309,15 +360,24 @@ class QueryService:
                     f"table {name!r} freq dtype {table.freq.dtype} != "
                     f"existing {old.freq.dtype}")
         with self._lock:
-            old_bucket = bucket_capacity(self._db[name].capacity,
-                                         self.min_bucket) \
+            old_bucket = self._bucket_cap(self._db[name].capacity) \
                 if name in self._db else None
             self._db[name] = table
             self.cache.drop_padded(name)
-            new_bucket = bucket_capacity(table.capacity, self.min_bucket)
+            new_bucket = self._bucket_cap(table.capacity)
             if old_bucket != new_bucket:
                 n = self.cache.invalidate_relation(name)
                 self.obs.inc("bucket_invalidations", n)
+
+    def _bucket_cap(self, n_rows: int) -> int:
+        """The shape bucket an n-row table pads to: power-of-two locally,
+        per-shard power-of-two blocks on a mesh (``min_bucket`` bounds the
+        PER-SHARD block there, so growth confined to one shard's bucket
+        reuses the compiled mesh program bit-for-bit)."""
+        if self._mesh is not None:
+            return self._jit_executor.shard_capacity(n_rows,
+                                                     self.min_bucket)
+        return bucket_capacity(n_rows, self.min_bucket)
 
     def _snapshot(self, rels) -> tuple[ShapeBucket, dict[str, Table]]:
         """Shape bucket + bucket-padded table views for `rels`.
@@ -334,7 +394,7 @@ class QueryService:
         with self._lock:
             base = {rel: self._db[rel] for rel in rels}
             bucket: ShapeBucket = tuple(
-                (rel, bucket_capacity(base[rel].capacity, self.min_bucket))
+                (rel, self._bucket_cap(base[rel].capacity))
                 for rel in rels)
         sub_db = {rel: self._padded_view(rel, base[rel], cap)
                   for rel, cap in bucket}
@@ -344,14 +404,24 @@ class QueryService:
         """`table` padded to `cap`, from the bounded padded-view cache.
         Entries are tagged with their source table; a tag mismatch (the
         relation was swapped after our snapshot) pads fresh but only
-        caches the view while it still describes the live table."""
+        caches the view while it still describes the live table.  On a
+        mesh the view is additionally placed row-sharded over the data
+        axes — also device work, also cached."""
         entry, _ = self._get_or_build(
             self.cache.padded, rel,
-            lambda: (table, table.pad_to(cap)),
+            lambda: (table, self._pad_table(table, cap)),
             flight_key=("pad", rel, cap),
             valid=lambda e: e[0] is table,
             cache_if=lambda e: self._db.get(rel) is table)
         return entry[1]
+
+    def _pad_table(self, table: Table, cap: int) -> Table:
+        padded = table.pad_to(cap)
+        if self._row_sharding is not None:
+            from repro.core.distributed import shard_table
+
+            padded = shard_table(padded, self._row_sharding)
+        return padded
 
     # ---- request plane ---------------------------------------------------
     def submit(self, query) -> QueryResult:
@@ -459,7 +529,8 @@ class QueryService:
         other machines (ship the directory; ``cache_dir=path`` or
         ``import_cache`` consumes it)."""
         dest = PlanStore(path, store_fingerprint(self.schema, self.mode,
-                                                 self.use_fkpk))
+                                                 self.use_fkpk,
+                                                 topology=self._topo))
         with self._lock:
             plans = self.cache.plans.items()
         exported = set()
@@ -479,7 +550,8 @@ class QueryService:
         when it has one).  Returns the number of plans imported.  Corrupt
         or schema-mismatched entries are skipped, never raised."""
         src = PlanStore(path, store_fingerprint(self.schema, self.mode,
-                                                self.use_fkpk))
+                                                self.use_fkpk,
+                                                topology=self._topo))
         n = 0
         own = self.cache.store
         write_through = own is not None \
@@ -725,6 +797,23 @@ class QueryService:
                 self._inflight.pop(fk, None)
             ev.set()
 
+    def _invoke(self, fn: Callable, sub_db: dict[str, Table], run_span):
+        """Execute one ready program to completion.  On a mesh, the
+        execution is additionally wrapped in a ``ring_sweep`` child span of
+        the request's ``run`` span — the collective sweep is the mesh
+        path's distinguishing cost and deserves its own timing row."""
+        if self._mesh is not None:
+            axes, counts = self._topo
+            with self.obs.span(run_span, "ring_sweep",
+                               axes="×".join(axes),
+                               shards=self._jit_executor.n_shards):
+                results = fn(sub_db)
+                jax.block_until_ready(results)
+            return results
+        results = fn(sub_db)
+        jax.block_until_ready(results)
+        return results
+
     def _finish_unit(self, u: _Unit, results: dict, *, exec_hit: bool,
                      bucket: ShapeBucket, compile_s: float, run_s: float,
                      fused_size: int = 0, exec_source: str = "") -> None:
@@ -750,8 +839,7 @@ class QueryService:
         fn, exec_hit, compile_s = self._executable(u.canon, u.plan, bucket,
                                                    sub_db, roots)
         with self.obs.span(roots, "run") as rsp:
-            results = fn(sub_db)
-            jax.block_until_ready(results)
+            results = self._invoke(fn, sub_db, rsp)
         self._finish_unit(u, results, exec_hit=exec_hit, bucket=bucket,
                           compile_s=compile_s, run_s=rsp.duration_s,
                           exec_source="exec_cache" if exec_hit
@@ -787,10 +875,10 @@ class QueryService:
             return fn
 
         fn, exec_hit = self._get_or_build(
-            self.cache.fused, PlanCache.fused_key(signature, bucket), build)
+            self.cache.fused,
+            PlanCache.fused_key(signature, bucket, self._topo), build)
         with self.obs.span(roots, "run", fused=True) as rsp:
-            outs = fn(sub_db)
-            jax.block_until_ready(outs)
+            outs = self._invoke(fn, sub_db, rsp)
 
         self.obs.inc("fused_batches")
         self.obs.inc("fused_queries", len(units))
@@ -828,7 +916,8 @@ class QueryService:
 
         fn, hit = self._get_or_build(
             self.cache.execs,
-            PlanCache.exec_key(canon.fingerprint, bucket), build)
+            PlanCache.exec_key(canon.fingerprint, bucket, self._topo),
+            build)
         return fn, hit, compile_s
 
     def _serve_eager(self, u: _Unit) -> None:
@@ -906,7 +995,23 @@ class QueryService:
         eager, prefix_key, subplans, sig = seg if seg is not None \
             else (False, None, frozenset(), fp)
         with self._lock:
-            levels = self.cache.describe(fp, st.bucket, signature=sig)
+            levels = self.cache.describe(fp, st.bucket, signature=sig,
+                                         topo=self._topo)
+        if self._mesh is not None:
+            axes, counts = self._topo
+            sharding = {
+                "data_axes": list(axes),
+                "shard_counts": dict(zip(axes, counts)),
+                "devices": self._jit_executor.n_shards,
+                # every scanned relation is row-sharded over the data
+                # axes; bucket capacities are per-shard blocks × shards
+                "placement": {rel: f"rows over {'×'.join(axes)} "
+                                   f"({cap // self._jit_executor.n_shards}"
+                                   f" rows/shard)"
+                              for rel, cap in st.bucket},
+            }
+        else:
+            sharding = None
         report = {
             "fingerprint": fp,
             "mode": st.mode,
@@ -920,6 +1025,8 @@ class QueryService:
             "prefix_key": prefix_key,
             "subplan_keys": sorted(subplans, key=repr),
             "bucket": st.bucket,
+            "topology": self._topo,
+            "sharding": sharding,
             "timings_s": {"parse": st.parse_s, "queue": st.queue_s,
                           "plan": st.plan_s, "compile": st.compile_s,
                           "run": st.run_s, "total": st.total_s},
@@ -936,6 +1043,10 @@ class QueryService:
                     else ""),
                  f"  graph_key: {sig[:32]}",
                  f"  shared subplans: {len(subplans)}",
+                 "  sharding: " + (
+                     f"rows over {'×'.join(sharding['data_axes'])} "
+                     f"({sharding['devices']} shards)"
+                     if sharding is not None else "single-device"),
                  "  timings: " + " ".join(
                      f"{k}={v * 1e3:.2f}ms"
                      for k, v in report["timings_s"].items())]

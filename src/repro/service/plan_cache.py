@@ -122,8 +122,10 @@ class PlanCache:
     """Four levels:
 
     * ``plans`` — fingerprint → PhysicalPlan;
-    * ``execs`` — (fingerprint, ShapeBucket) → single-query executable;
-    * ``fused`` — (merged-graph signature, ShapeBucket) → fused
+    * ``execs`` — (fingerprint, topology, ShapeBucket) → single-query
+      executable, where topology is ``(axis_names, shard_counts)`` for a
+      mesh-lowered program and ``()`` locally;
+    * ``fused`` — (merged-graph signature, topology, ShapeBucket) → fused
       multi-query executable.  The signature content-addresses the whole
       member set (sorted graph keys), so it is order-invariant and safe
       across structurally-identical query sets;
@@ -162,19 +164,26 @@ class PlanCache:
     # single source of the executable-cache key shapes: the serving engine
     # accesses the LRUs directly (to keep builds outside its lock) but
     # builds its keys here, and ``invalidate_relation`` relies on the
-    # bucket sitting last
+    # bucket sitting last.  ``topo`` is the shard topology the executable
+    # was lowered for — ``(axis_names, shard_counts)`` on a mesh service,
+    # ``()`` on a single device: the same fingerprint served at the same
+    # bucket compiles to a DIFFERENT program per mesh shape (ring length,
+    # collective layout), so topologies must occupy distinct entries.
     @staticmethod
-    def exec_key(fingerprint: str, bucket: ShapeBucket) -> tuple:
-        return (fingerprint, bucket)
+    def exec_key(fingerprint: str, bucket: ShapeBucket,
+                 topo: tuple = ()) -> tuple:
+        return (fingerprint, topo, bucket)
 
     @staticmethod
-    def fused_key(signature: str, bucket: ShapeBucket) -> tuple:
-        return (signature, bucket)
+    def fused_key(signature: str, bucket: ShapeBucket,
+                  topo: tuple = ()) -> tuple:
+        return (signature, topo, bucket)
 
     def get_executable(self, fingerprint: str, bucket: ShapeBucket,
-                       factory: Callable[[], Callable]) -> tuple[Callable, bool]:
-        return self.execs.get_or_create(self.exec_key(fingerprint, bucket),
-                                        factory)
+                       factory: Callable[[], Callable],
+                       topo: tuple = ()) -> tuple[Callable, bool]:
+        return self.execs.get_or_create(
+            self.exec_key(fingerprint, bucket, topo), factory)
 
     def invalidate_relation(self, rel: str) -> int:
         """Drop executables whose bucket pins `rel` to a now-stale capacity.
@@ -193,7 +202,8 @@ class PlanCache:
         self.padded.invalidate_if(lambda k: k == rel)
 
     def describe(self, fingerprint: str, bucket: ShapeBucket | None = None,
-                 signature: str | None = None) -> dict[str, bool]:
+                 signature: str | None = None,
+                 topo: tuple = ()) -> dict[str, bool]:
         """Hit-level attribution for one fingerprint — which cache levels
         could answer it RIGHT NOW.  Counter-free and LRU-order-free
         (``peek`` semantics): this is an inspection surface for
@@ -205,10 +215,10 @@ class PlanCache:
         }
         if bucket is not None:
             out["exec_in_memory"] = \
-                self.exec_key(fingerprint, bucket) in self.execs
+                self.exec_key(fingerprint, bucket, topo) in self.execs
             if signature is not None:
                 out["fused_in_memory"] = \
-                    self.fused_key(signature, bucket) in self.fused
+                    self.fused_key(signature, bucket, topo) in self.fused
         return out
 
     def metrics(self) -> dict[str, int]:

@@ -79,17 +79,23 @@ def schema_fingerprint(schema: Schema) -> str:
 
 
 def store_fingerprint(schema: Schema, mode: str = "auto",
-                      use_fkpk: bool = False) -> str:
+                      use_fkpk: bool = False,
+                      topology: tuple = ()) -> str:
     """The identity a service's store entries must match: schema structure
-    PLUS planner configuration.  Persisted plans are *planner output* — a
-    store warmed by a ``mode="ref"`` service must not hand materialising
-    plans to an ``opt_plus`` service, and a ``use_fkpk=True`` store must
-    not impose FK-trusting semi-joins on a service configured not to trust
-    the declared FKs.  Stores with different fingerprints keep separate
-    entry directories under one ``cache_dir``, so differently-configured
-    services can share it without evicting each other."""
+    PLUS planner configuration PLUS shard topology.  Persisted plans are
+    *planner output* — a store warmed by a ``mode="ref"`` service must not
+    hand materialising plans to an ``opt_plus`` service, and a
+    ``use_fkpk=True`` store must not impose FK-trusting semi-joins on a
+    service configured not to trust the declared FKs.  ``topology`` is the
+    serving mesh's ``(axis_names, shard_counts)`` (``()`` on a single
+    device): a mesh service's warm-start bookkeeping (and the XLA
+    executable cache living beside its entries) describes programs lowered
+    for that mesh shape, so differently-sharded services keep disjoint
+    entry directories under one ``cache_dir`` and never leak state across
+    configs."""
     return hashlib.sha256(repr((schema_fingerprint(schema), mode,
-                                use_fkpk)).encode()).hexdigest()
+                                use_fkpk,
+                                tuple(topology))).encode()).hexdigest()
 
 
 def _canonical_body(payload: dict) -> bytes:

@@ -194,6 +194,28 @@ def bucket_capacity(n: int, min_capacity: int = 8) -> int:
     return 1 << (n - 1).bit_length()
 
 
+def sharded_bucket_capacity(n: int, n_shards: int,
+                            min_capacity: int = 8) -> int:
+    """Shape bucket for a table of n rows ROW-SHARDED over `n_shards`
+    devices: each shard holds a power-of-two block of
+    ``bucket_capacity(ceil(n / n_shards))`` rows, so the total is both
+    divisible by the shard count (a shard_map requirement) and stable
+    under per-shard growth — rows added anywhere inside the per-shard
+    bucket never change the mesh program's shapes.
+
+    For power-of-two shard counts this equals
+    ``bucket_capacity(n, n_shards * min_capacity)`` (the per-shard
+    rounding distributes over the product), which is what makes a mesh
+    service's padded capacities reproducible on one device: a local
+    service with ``min_bucket = n_shards * min_capacity`` pads every
+    relation to exactly the mesh's global shapes."""
+    n_shards = int(n_shards)
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    per_shard = -(-max(int(n), 1) // n_shards)   # ceil
+    return n_shards * bucket_capacity(per_shard, min_capacity)
+
+
 def pack_keys(
     cols: Sequence[jax.Array],
     domains: Sequence[int | None],

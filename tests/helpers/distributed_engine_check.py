@@ -1,5 +1,13 @@
 """Subprocess helper: runs the distributed engine on 8 fake devices and
-compares against the local executor.  Exits non-zero on mismatch.
+compares against the local executor BITWISE.  Exits non-zero on mismatch.
+
+The mesh program and the local program see identically-padded tables
+(``shard_db`` pads to per-shard power-of-two buckets; the host reference
+pads to the same global capacities), so every aggregate — including float
+SUM/AVG/MEDIAN and GROUP BY — must agree to the bit: the ring sweep
+produces the exact integer frequencies of the local sweep, and final
+aggregation runs replicated on the same arrays.  An eager run on the
+UNPADDED tables sanity-checks values with np.isclose on top.
 
 Run as:  python tests/helpers/distributed_engine_check.py
 (the test wrapper sets XLA_FLAGS before interpreter start).
@@ -17,26 +25,61 @@ from repro.core.distributed import DistributedExecutor  # noqa: E402
 from repro.data import make_graph_db, path_query, tree_query  # noqa: E402
 from repro.data.relational import (  # noqa: E402
     make_stats_db,
-    stats_count_query,
     make_tpch_db,
+    stats_count_query,
     tpch_v1_query,
 )
 
 
-def check(db, schema, q, mode, mesh, data_axes, name):
-    ex = Executor(db, schema)
-    want = ex.execute(plan_query(q, schema, mode=mode))
-    dex = DistributedExecutor(schema, mesh, data_axes=data_axes)
+def assert_bitwise(want: dict, got: dict, ctx: str):
+    keys = {k for k in want if k != "__stats__"}
+    assert keys == {k for k in got if k != "__stats__"}, ctx
+    for k in keys:
+        va, vb = want[k], got[k]
+        if k == "groups":
+            assert set(va) == set(vb), ctx
+            for c in va:
+                xa, xb = np.asarray(va[c]), np.asarray(vb[c])
+                assert xa.dtype == xb.dtype and xa.shape == xb.shape, (ctx, c)
+                assert xa.tobytes() == xb.tobytes(), (ctx, c)
+        else:
+            xa, xb = np.asarray(va), np.asarray(vb)
+            assert xa.dtype == xb.dtype and xa.shape == xb.shape, (ctx, k)
+            assert xa.tobytes() == xb.tobytes(), (ctx, k, xa, xb)
+
+
+def check(db, schema, q, mode, mesh, data_axes, name, **dex_opts):
+    dex = DistributedExecutor(schema, mesh, data_axes=data_axes, **dex_opts)
     sharded = dex.shard_db(db)
-    got = dex.compile(plan_query(q, schema, mode=mode))(sharded)
-    for k, v in want.items():
-        if k == "__stats__":
+    # the single-device reference over the SAME padded capacities
+    host = {k: db[k].pad_to(sharded[k].capacity) for k in db}
+    ex = Executor(db, schema,
+                  dense_domain=dex_opts.get("dense_domain", False))
+    plan = plan_query(q, schema, mode=mode)
+
+    want = dict(ex.compile(plan)(host))
+    got = dict(dex.compile(plan)(sharded))
+    assert_bitwise(want, got, name)
+
+    # eager sanity on the unpadded tables (float tolerance: different
+    # reduction lengths)
+    eager = ex.execute(plan)
+    for k, v in eager.items():
+        if k in ("__stats__", "groups", "valid"):
             continue
-        g = float(got[k])
-        w = float(v)
-        assert np.isclose(g, w, rtol=1e-5), (name, k, g, w)
+        assert np.isclose(float(got[k]), float(v), rtol=1e-5), (name, k)
     print(f"ok {name}: " + ", ".join(
-        f"{k}={float(v)}" for k, v in got.items()))
+        f"{k}={float(v)}" for k, v in got.items()
+        if k not in ("groups", "valid")))
+    return dex, sharded, plan, got
+
+
+def check_fused(dex, sharded, plans, solo, name):
+    """compile_multi (shared ring sweeps) must match per-plan compiles."""
+    fused = dex.compile_multi(plans)(sharded)
+    for i, (want, got) in enumerate(zip(solo, fused)):
+        assert_bitwise(dict(want), dict(got), f"{name}[{i}]")
+    print(f"ok {name}: {len(plans)} plans, one mesh program")
 
 
 def main():
@@ -60,12 +103,32 @@ def main():
     check(sdb, sschema, stats_count_query(), "opt_plus", mesh2,
           ("pod", "data"), "stats-count/2-axis")
 
-    # 0MA semi-join ring sweep
+    # 0MA semi-join ring sweep + per-shard bucketing variants
     tdb, tschema = make_tpch_db(scale=64, seed=5)
+    dex, sharded, p_minmax, r_minmax = check(
+        tdb, tschema, tpch_v1_query("minmax"), "oma", mesh1, ("data",),
+        "tpch-v1-minmax/1-axis")
+    _, _, p_median, r_median = check(
+        tdb, tschema, tpch_v1_query("median"), "opt_plus", mesh1,
+        ("data",), "tpch-v1-median/1-axis")
     check(tdb, tschema, tpch_v1_query("minmax"), "oma", mesh2,
           ("pod", "data"), "tpch-v1-minmax/2-axis")
     check(tdb, tschema, tpch_v1_query("median"), "opt_plus", mesh1,
-          ("data",), "tpch-v1-median/1-axis")
+          ("data",), "tpch-v1-median/presort", presort=True)
+    check(tdb, tschema, tpch_v1_query("minmax"), "oma", mesh1, ("data",),
+          "tpch-v1-minmax/dense", dense_domain=True)
+
+    # fused multi-query mesh program vs per-plan compiles (shared memo)
+    check_fused(dex, sharded, [p_minmax, p_median], [r_minmax, r_median],
+                "tpch-fused/1-axis")
+
+    # per-shard power-of-two bucketing: shard_db pads every relation so
+    # each shard holds a power-of-two block
+    for rel, t in sharded.items():
+        per_shard = t.capacity // 8
+        assert per_shard >= 8 and (per_shard & (per_shard - 1)) == 0, \
+            (rel, t.capacity)
+    print("ok shard_db per-shard power-of-two buckets")
     print("ALL DISTRIBUTED CHECKS PASSED")
 
 

@@ -1,0 +1,169 @@
+"""Subprocess helper: QueryService(mesh=...) on 8 fake devices vs a
+single-device QueryService, across every planner mode — BITWISE.
+
+The local reference is constructed with ``min_bucket = n_shards *
+mesh_min_bucket``: for a power-of-two mesh, ``sharded_bucket_capacity``
+collapses to ``bucket_capacity(n, n_shards * min)``, so both services pad
+every relation to identical global capacities and their answers must
+agree to the bit (same arrays into the same replicated final-aggregate
+program).  Error parity is part of the contract: a query a mode cannot
+plan must fail on BOTH services.
+
+Also checks: fused-vs-individual submission on the mesh, async
+submission, within-bucket growth (zero recompiles, zero invalidations),
+mesh gauges, and explain() shard placement.
+
+Run as:  python tests/helpers/mesh_service_check.py
+(the test wrapper sets XLA_FLAGS before interpreter start.)
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import jax  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.data.relational import make_tpch_db  # noqa: E402
+from repro.service import QueryService  # noqa: E402
+from repro.tables.table import Table  # noqa: E402
+
+MIN_BUCKET = 8
+N_DEV = 8
+
+FIG1 = """
+SELECT MIN(s.s_acctbal), MAX(s.s_acctbal)
+FROM region r, nation n, supplier s, partsupp ps, part p
+WHERE r.r_regionkey = n.n_regionkey AND n.n_nationkey = s.s_nationkey
+  AND s.s_suppkey = ps.ps_suppkey AND ps.ps_partkey = p.p_partkey
+  AND r.r_name IN (2, 3) AND p.p_price > 1200.0
+"""
+MEDIAN = """
+SELECT MEDIAN(s.s_acctbal)
+FROM region r, nation n, supplier s, partsupp ps, part p
+WHERE r.r_regionkey = n.n_regionkey AND n.n_nationkey = s.s_nationkey
+  AND s.s_suppkey = ps.ps_suppkey AND ps.ps_partkey = p.p_partkey
+  AND r.r_name IN (0, 1) AND p.p_price > 800.0
+"""
+GROUPBY = """
+SELECT COUNT(*) AS suppliers, AVG(s.s_acctbal) AS avg_bal
+FROM supplier s, nation n
+WHERE s.s_nationkey = n.n_nationkey
+GROUP BY s.s_nationkey
+"""
+COSTLY = """
+SELECT SUM(ps.ps_supplycost), COUNT(*)
+FROM partsupp ps, part p
+WHERE ps.ps_partkey = p.p_partkey AND p.p_price > 1500.0
+"""
+QUERIES = [("fig1", FIG1), ("median", MEDIAN), ("groupby", GROUPBY),
+           ("costly", COSTLY)]
+
+
+def assert_bitwise(a: dict, b: dict, ctx: str):
+    assert set(a) == set(b), (ctx, set(a) ^ set(b))
+    for k in a:
+        va, vb = a[k], b[k]
+        if isinstance(va, dict):            # grouped "groups" columns
+            assert set(va) == set(vb), (ctx, k)
+            for c in va:
+                xa, xb = np.asarray(va[c]), np.asarray(vb[c])
+                assert xa.dtype == xb.dtype and xa.shape == xb.shape, \
+                    (ctx, k, c)
+                assert xa.tobytes() == xb.tobytes(), (ctx, k, c)
+        else:
+            xa, xb = np.asarray(va), np.asarray(vb)
+            assert xa.dtype == xb.dtype and xa.shape == xb.shape, (ctx, k)
+            assert xa.tobytes() == xb.tobytes(), (ctx, k)
+
+
+def grow_within_bucket(db: dict, rel: str, extra: int) -> Table:
+    """`rel` with `extra` rows appended (copies of its first rows)."""
+    t = db[rel]
+    data = {c: np.concatenate([np.asarray(a), np.asarray(a[:extra])])
+            for c, a in t.columns.items()}
+    return Table.from_numpy(data)
+
+
+def check_mode(db, schema, mesh, mode):
+    mesh_svc = QueryService(db, schema, mode=mode, mesh=mesh,
+                            min_bucket=MIN_BUCKET)
+    local_svc = QueryService(db, schema, mode=mode,
+                             min_bucket=MIN_BUCKET * N_DEV)
+    mesh_res = mesh_svc.submit_many([q for _, q in QUERIES])
+    local_res = local_svc.submit_many([q for _, q in QUERIES])
+    served = 0
+    for (name, _), mr, lr in zip(QUERIES, mesh_res, local_res):
+        ctx = f"{mode}/{name}"
+        # error parity: a mode that cannot plan a query fails identically
+        assert (mr.error is None) == (lr.error is None), \
+            (ctx, mr.error, lr.error)
+        if mr.error is not None:
+            assert type(mr.error) is type(lr.error), ctx
+            continue
+        assert_bitwise(mr.values, lr.values, ctx)
+        served += 1
+    # individual submission must match the fused batch bitwise
+    for (name, q), mr in zip(QUERIES, mesh_res):
+        if mr.error is not None:
+            continue
+        assert_bitwise(mesh_svc.submit(q).values, mr.values,
+                       f"{mode}/{name}/solo-vs-batch")
+    print(f"ok mode={mode}: {served}/{len(QUERIES)} served bitwise, "
+          f"{len(QUERIES) - served} error-parity")
+    return mesh_svc, mesh_res
+
+
+def main():
+    assert jax.device_count() == N_DEV, jax.device_count()
+    mesh = jax.make_mesh((N_DEV,), ("data",))
+    db, schema = make_tpch_db(scale=50, seed=11)
+
+    for mode in ("ref", "opt", "opt_plus", "oma"):
+        check_mode(db, schema, mesh, mode)
+
+    # deeper checks on the auto-mode mesh service
+    svc, _ = check_mode(db, schema, mesh, "auto")
+    local = QueryService(db, schema, min_bucket=MIN_BUCKET * N_DEV)
+
+    # async submission flows through the same mesh pipeline
+    fut = svc.submit_async(FIG1)
+    assert_bitwise(fut.result(timeout=120).values, local.submit(FIG1).values,
+                   "async")
+    svc.close()
+    print("ok async-on-mesh")
+
+    # mesh gauges + explain placement
+    m2 = svc.metrics_v2()
+    assert m2["gauges"]["mesh_devices"] == N_DEV, m2["gauges"]
+    assert m2["gauges"]["mesh_shard_count_data"] == N_DEV
+    exp = svc.explain(FIG1)
+    assert exp["topology"] == (("data",), (N_DEV,)), exp["topology"]
+    assert exp["sharding"]["devices"] == N_DEV
+    assert all("rows over data" in p
+               for p in exp["sharding"]["placement"].values())
+    assert "rows over data (8 shards)" in exp["text"]
+    print("ok gauges + explain placement")
+
+    # within-bucket per-shard growth: same mesh program, bit-for-bit —
+    # zero recompiles, zero invalidations, answers track the new data
+    before = svc.metrics()
+    grown = grow_within_bucket(db, "partsupp", extra=N_DEV * 3)
+    svc.update_table("partsupp", grown)
+    local.update_table("partsupp", grown)
+    after_update = svc.metrics()
+    assert after_update["bucket_invalidations"] \
+        == before["bucket_invalidations"], "growth crossed a bucket"
+    res = svc.submit(COSTLY)
+    assert_bitwise(res.values, local.submit(COSTLY).values, "after-growth")
+    after = svc.metrics()
+    assert after["compiles"] == before["compiles"], \
+        (before["compiles"], after["compiles"])
+    assert res.stats.exec_cache_hit, "grown table missed the exec cache"
+    print("ok within-bucket growth: zero recompiles, answers bitwise")
+
+    print("ALL MESH SERVICE CHECKS PASSED")
+
+
+if __name__ == "__main__":
+    main()

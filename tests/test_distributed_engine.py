@@ -1,5 +1,14 @@
 """Distributed-engine equivalence: runs the 8-device ring sweep in a
-subprocess (device count must be fixed before jax initialises)."""
+subprocess (device count must be fixed before jax initialises).
+
+Two layers of differential coverage, both BITWISE:
+
+* executor level — ``DistributedExecutor.compile``/``compile_multi`` vs
+  the local ``Executor`` on identically-padded tables;
+* service level — ``QueryService(mesh=...)`` vs a single-device
+  ``QueryService`` across every planner mode (ref/opt/opt_plus/oma),
+  fused-vs-individual submission, and within-bucket growth.
+"""
 
 import os
 import pathlib
@@ -8,16 +17,29 @@ import sys
 
 import pytest
 
-HELPER = pathlib.Path(__file__).parent / "helpers" / "distributed_engine_check.py"
+HELPERS = pathlib.Path(__file__).parent / "helpers"
 SRC = str(pathlib.Path(__file__).parent.parent / "src")
+
+
+def _run_on_8_devices(helper: str) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    out = subprocess.run([sys.executable, str(HELPERS / helper)], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
+    return out.stdout
 
 
 @pytest.mark.slow
 def test_ring_freq_join_matches_local_executor():
-    env = dict(os.environ)
-    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
-    out = subprocess.run([sys.executable, str(HELPER)], env=env,
-                         capture_output=True, text=True, timeout=900)
-    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr}"
-    assert "ALL DISTRIBUTED CHECKS PASSED" in out.stdout
+    out = _run_on_8_devices("distributed_engine_check.py")
+    assert "ALL DISTRIBUTED CHECKS PASSED" in out
+
+
+@pytest.mark.slow
+def test_mesh_service_matches_local_service_all_modes():
+    out = _run_on_8_devices("mesh_service_check.py")
+    assert "ALL MESH SERVICE CHECKS PASSED" in out
+    for mode in ("ref", "opt", "opt_plus", "oma"):
+        assert f"ok mode={mode}" in out

@@ -19,6 +19,7 @@ import numpy as np
 import pytest
 
 from repro.core import Executor, plan_query
+from repro.core.distributed import DistributedExecutor
 from repro.core.executor import ExecStats
 from repro.core.plan import (
     FinalAggOp,
@@ -214,6 +215,22 @@ def _check_case(seed: int):
         fused = new.compile_multi(plans)(db)
         for want_c, got_c in zip(solo, fused):
             _assert_bitwise(want_c, dict(got_c), ctx="fused-vs-solo")
+
+        # the mesh lowering is the same graph interpreter with ring
+        # evaluators — on a 1-device mesh it must be bitwise-equal to the
+        # local executor over identically-padded tables, per-plan and fused
+        mesh = jax.make_mesh((1,), ("data",))
+        dex = DistributedExecutor(SCHEMA, mesh)
+        sharded = dex.shard_db(db)
+        host = {k: db[k].pad_to(sharded[k].capacity) for k in db}
+        mesh_solo = []
+        for plan in plans:
+            want_c = dict(new.compile(plan)(host))
+            got_c = dict(dex.compile(plan)(sharded))
+            _assert_bitwise(want_c, got_c, ctx="mesh-vs-local")
+            mesh_solo.append(got_c)
+        for want_c, got_c in zip(mesh_solo, dex.compile_multi(plans)(sharded)):
+            _assert_bitwise(want_c, dict(got_c), ctx="mesh-fused-vs-solo")
 
 
 if HAVE_HYPOTHESIS:

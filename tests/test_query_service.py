@@ -140,8 +140,9 @@ def test_plan_cache_invalidate_relation():
     pc.get_executable("fp1", (("part", 128), ("supplier", 64)), lambda: "x")
     pc.get_executable("fp2", (("nation", 32),), lambda: "y")
     assert pc.invalidate_relation("part") == 1
-    assert ("fp2", (("nation", 32),)) in pc.execs
-    assert ("fp1", (("part", 128), ("supplier", 64))) not in pc.execs
+    assert PlanCache.exec_key("fp2", (("nation", 32),)) in pc.execs
+    assert PlanCache.exec_key(
+        "fp1", (("part", 128), ("supplier", 64))) not in pc.execs
 
 
 def test_physical_plan_hashable_and_comparable():
