@@ -1,10 +1,34 @@
-"""Render the roofline JSON into the EXPERIMENTS.md markdown table."""
+"""Render benchmark JSON: roofline markdown tables and perf diffs.
 
+Two modes:
+
+* ``python benchmarks/report.py [roofline_results.json]`` — the
+  original EXPERIMENTS.md markdown table from a roofline run.
+
+* ``python benchmarks/report.py --compare OLD.json NEW.json`` — a
+  per-row ``us_per_call`` diff between two schema-versioned
+  ``BENCH_*.json`` trajectory files (``benchmarks/recorder.py``).
+  Rows are matched by ``(section, name)``; rows present on only one
+  side, or with no timing (``null``), are listed but never compared.
+  Regressions beyond ``--threshold`` (default 1.25×) exit 3 so a
+  caller MAY gate on it; ``scripts/verify.sh`` wires it as advisory
+  (prints, never fails the build) because single-run timings on a
+  shared CI box are noisy.
+"""
+
+import argparse
 import json
+import os
 import sys
 
+# run as `python benchmarks/report.py` (script dir on sys.path, repo root
+# not) and as `python -m benchmarks.report`
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
-def main(path="roofline_results.json"):
+from benchmarks.recorder import validate_bench  # noqa: E402
+
+
+def roofline_table(path="roofline_results.json"):
     d = json.load(open(path))
     rows = d["rows"]
     print("| arch | shape | compute (s) | memory (s) | collective (s) | "
@@ -25,7 +49,86 @@ def main(path="roofline_results.json"):
                                                           1e-12))
         print(f"most collective-bound: {m['arch']} × {m['shape']} "
               f"(N/C = {m['collective_s'] / max(m['compute_s'], 1e-12):.1f})")
+    return 0
+
+
+def _load_bench(path: str) -> dict | None:
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"compare: unreadable {path}: {e}", file=sys.stderr)
+        return None
+    problems = validate_bench(doc)
+    if problems:
+        for p in problems:
+            print(f"compare: invalid {path}: {p}", file=sys.stderr)
+        return None
+    return doc
+
+
+def _timed_rows(doc: dict) -> dict:
+    """(section, name) -> us_per_call for rows that carry a timing."""
+    out = {}
+    for r in doc["rows"]:
+        if isinstance(r.get("us_per_call"), (int, float)):
+            out[(r.get("section", ""), r["name"])] = float(r["us_per_call"])
+    return out
+
+
+def compare(old_path: str, new_path: str, threshold: float = 1.25) -> int:
+    """Per-row perf diff OLD → NEW.  Exit 0 (clean), 2 (unreadable
+    input), 3 (regression beyond threshold — advisory for callers)."""
+    old_doc, new_doc = _load_bench(old_path), _load_bench(new_path)
+    if old_doc is None or new_doc is None:
+        return 2
+    old, new = _timed_rows(old_doc), _timed_rows(new_doc)
+    shared = sorted(set(old) & set(new))
+    print(f"compare: {old_path} ({old_doc['benchmark']}, "
+          f"{len(old)} timed rows) -> {new_path} "
+          f"({new_doc['benchmark']}, {len(new)} timed rows), "
+          f"{len(shared)} shared")
+    regressions = []
+    print(f"{'section/name':48s} {'old_us':>12s} {'new_us':>12s} "
+          f"{'ratio':>7s}")
+    for key in shared:
+        o, n = old[key], new[key]
+        ratio = n / o if o > 0 else float("inf")
+        tag = ""
+        if ratio > threshold:
+            tag = "  REGRESSION"
+            regressions.append((key, ratio))
+        elif ratio < 1.0 / threshold:
+            tag = "  improved"
+        label = "/".join(p for p in key if p)
+        print(f"{label[:48]:48s} {o:12.1f} {n:12.1f} {ratio:7.2f}{tag}")
+    for side, keys in (("only in old", set(old) - set(new)),
+                       ("only in new", set(new) - set(old))):
+        for key in sorted(keys):
+            print(f"# {side}: {'/'.join(p for p in key if p)}")
+    if regressions:
+        worst = max(regressions, key=lambda kr: kr[1])
+        print(f"compare: {len(regressions)} regression(s) > "
+              f"{threshold:.2f}x (worst: "
+              f"{'/'.join(p for p in worst[0] if p)} at {worst[1]:.2f}x)")
+        return 3
+    print(f"compare: no regressions > {threshold:.2f}x")
+    return 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("path", nargs="?", default="roofline_results.json",
+                    help="roofline JSON to render as markdown")
+    ap.add_argument("--compare", nargs=2, metavar=("OLD.json", "NEW.json"),
+                    help="diff two BENCH_*.json trajectory files instead")
+    ap.add_argument("--threshold", type=float, default=1.25,
+                    help="ratio above which a row counts as a regression")
+    args = ap.parse_args(argv)
+    if args.compare:
+        return compare(args.compare[0], args.compare[1], args.threshold)
+    return roofline_table(args.path)
 
 
 if __name__ == "__main__":
-    main(*sys.argv[1:])
+    raise SystemExit(main())

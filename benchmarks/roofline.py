@@ -1,8 +1,3 @@
-import os
-
-os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
-                           + os.environ.get("XLA_FLAGS", ""))
-
 """Roofline analysis per (arch × shape) on the single-pod mesh (§Roofline).
 
 Terms (seconds, per device, per step):
@@ -33,15 +28,24 @@ Hardware model (TPU v5e-class): 197 TFLOP/s bf16, 819 GB/s HBM,
 50 GB/s ICI per chip.
 """
 
-import argparse      # noqa: E402
-import dataclasses   # noqa: E402
-import json          # noqa: E402
-import re            # noqa: E402
+import argparse
+import dataclasses
+import json
+import os
+import re
+
+from repro.configs import ARCHS, SHAPES, cells_for, get_config
+from repro.launch.dryrun import _LOWER
+from repro.launch.mesh import make_production_mesh
 
 
-from repro.configs import ARCHS, SHAPES, cells_for, get_config  # noqa: E402
-from repro.launch.dryrun import _LOWER  # noqa: E402
-from repro.launch.mesh import make_production_mesh  # noqa: E402
+def _force_host_devices(n: int = 512) -> None:
+    """Opt IN to the fake 512-device host platform.  Must run before jax
+    initialises its backend, so ``main()`` calls it first thing; merely
+    importing this module (e.g. for :func:`collective_seconds`) leaves
+    the process's device topology alone."""
+    os.environ["XLA_FLAGS"] = (f"--xla_force_host_platform_device_count={n} "
+                               + os.environ.get("XLA_FLAGS", ""))
 
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9
@@ -190,6 +194,7 @@ def run_cell(arch: str, shape: str):
 
 
 def main():
+    _force_host_devices()
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default=None, choices=list(ARCHS))
     ap.add_argument("--shape", default=None, choices=list(SHAPES))

@@ -80,7 +80,8 @@ class Executor:
                  interpret: bool = True, oom_guard: int | None = None,
                  dense_domain: bool = False,
                  span_hook: Callable[[str], Any] | None = None,
-                 profile_annotations: bool = False):
+                 profile_annotations: bool = False,
+                 tuning=None):
         self.db = db
         self.schema = schema
         self.freq_dtype = freq_dtype
@@ -89,6 +90,11 @@ class Executor:
         self.oom_guard = oom_guard
         # beyond-paper: sort-free scatter-add FreqJoin on dense key domains
         self.dense_domain = dense_domain
+        # tuned kernel configs (repro.kernels.autotune.TuneTable, or None
+        # for untuned defaults): looked up at trace time by the concrete
+        # kernel input sizes — already bucket-padded on the serving path,
+        # so the lookup lands on the bucket the entry was tuned at
+        self.tuning = tuning
         # observability hooks: span_hook(name) -> context manager wraps the
         # trace/execute phases (the serving tier wires its own spans above
         # this layer; the hook is for standalone Executor users), and
@@ -106,7 +112,8 @@ class Executor:
                         self.interpret, oom_guard=None,
                         dense_domain=self.dense_domain,
                         span_hook=self.span_hook,
-                        profile_annotations=self.profile_annotations)
+                        profile_annotations=self.profile_annotations,
+                        tuning=self.tuning)
 
     @contextlib.contextmanager
     def _span(self, name: str):
@@ -154,6 +161,15 @@ class Executor:
                 domain *= d
         return key, domain
 
+    def _tune_cfg(self, kernel: str, *sizes: int):
+        """Tuned config for one kernel call (None → untuned defaults).
+        Sizes are the concrete trace-time array lengths, which on the
+        serving path are already padded to their shape bucket — so the
+        table lookup hits exactly the bucket ``autotune()`` measured."""
+        if self.tuning is None:
+            return None
+        return self.tuning.lookup(kernel, sizes, self.backend)
+
     def _semi_join(self, plan: PhysicalPlan, op: SemiJoinOp,
                    p: _State, c: _State) -> _State:
         pk, _pd = self._key(plan, op.parent, p, op.on_vars)
@@ -161,7 +177,9 @@ class Executor:
         freq = kops.semi_join(pk, p.freq, ck, c.freq,
                               backend=self.backend,
                               interpret=self.interpret,
-                              domain=cdom)
+                              domain=cdom,
+                              config=self._tune_cfg(
+                                  "semi_join", pk.shape[0], ck.shape[0]))
         return _State(p.cols, freq)
 
     def _freq_join(self, plan: PhysicalPlan, op: FreqJoinOp,
@@ -171,11 +189,14 @@ class Executor:
         cf = c.freq
         if op.pregroup and cdom is None:
             ck, cf, _valid = kops.group_by_sum(
-                ck, cf, backend=self.backend, interpret=self.interpret)
+                ck, cf, backend=self.backend, interpret=self.interpret,
+                config=self._tune_cfg("segment_sum", ck.shape[0]))
         freq = kops.freq_join(pk, p.freq, ck, cf,
                               backend=self.backend,
                               interpret=self.interpret,
-                              domain=cdom)
+                              domain=cdom,
+                              config=self._tune_cfg(
+                                  "freq_join", pk.shape[0], ck.shape[0]))
         return _State(p.cols, freq)
 
     # ------------------------------------------------------------------
@@ -334,7 +355,8 @@ class Executor:
         — is shared and lives only in ``_trace_plan``."""
         return Executor(db, self.schema, self.freq_dtype,
                         self.backend, self.interpret,
-                        dense_domain=self.dense_domain)
+                        dense_domain=self.dense_domain,
+                        tuning=self.tuning)
 
     def _trace_plan(self, db: dict[str, Table], plan: PhysicalPlan,
                     memo: dict | None = None,

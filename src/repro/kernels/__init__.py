@@ -3,10 +3,17 @@
   freq_join.py   — FreqJoin (paper §5): blocked broadcast-compare sum-product
   semi_join.py   — Boolean-semiring specialisation (0MA sweep, §4.1)
   segment_sum.py — sorted group-by-SUM (frequency pre-grouping, §4.2/§4.3)
-  ops.py         — jit'd public wrappers, padding, XLA twins, dispatch
+  ops.py         — public wrappers, padding, XLA twins, config dispatch
+  autotune.py    — measured block/dispatch search per shape bucket
   ref.py         — pure-jnp O(N·M) oracles (ground truth for tests)
 """
 
+from repro.kernels.autotune import (
+    DEFAULT_CONFIG,
+    KernelConfig,
+    KernelTuner,
+    TuneTable,
+)
 from repro.kernels.ops import (
     freq_join,
     group_by_sum,
@@ -16,6 +23,10 @@ from repro.kernels.ops import (
 )
 
 __all__ = [
+    "DEFAULT_CONFIG",
+    "KernelConfig",
+    "KernelTuner",
+    "TuneTable",
     "freq_join",
     "group_by_sum",
     "segment_sum_sorted",

@@ -34,8 +34,11 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-# Block shapes: sublane × lane tiles. 8×128 is the fp32 native tile; larger
-# parent blocks amortise child traffic (see EXPERIMENTS.md §Perf).
+# Default block shapes: sublane × lane tiles. 8×128 is the fp32 native
+# tile; larger parent blocks amortise child traffic (see EXPERIMENTS.md
+# §Perf).  Both kernels take the block rows as static arguments so the
+# autotuner (kernels/autotune.py) can search per shape bucket; these
+# module constants are only the untuned defaults.
 PARENT_BLOCK_ROWS = 8
 CHILD_BLOCK_ROWS = 8
 LANES = 128
@@ -75,39 +78,44 @@ def _freq_join_kernel(pk_ref, pf_ref, ck_ref, cf_ref, out_ref, *, mode: str,
         out_ref[...] = pf_ref[...] * out_ref[...]
 
 
-@functools.partial(jax.jit, static_argnames=("mode", "interpret"))
+@functools.partial(jax.jit, static_argnames=("mode", "interpret",
+                                             "parent_block_rows",
+                                             "child_block_rows"))
 def freq_join_pallas(parent_keys, parent_freq, child_keys, child_freq,
-                     *, mode: str = "sum", interpret: bool = False):
+                     *, mode: str = "sum", interpret: bool = False,
+                     parent_block_rows: int = PARENT_BLOCK_ROWS,
+                     child_block_rows: int = CHILD_BLOCK_ROWS):
     """Blocked FreqJoin. Inputs must be pre-padded:
 
-    parent_keys/freq : (Np,)  Np % (PARENT_BLOCK_ROWS*128) == 0
-    child_keys/freq  : (Nc,)  Nc % (CHILD_BLOCK_ROWS*128) == 0
+    parent_keys/freq : (Np,)  Np % (parent_block_rows*128) == 0
+    child_keys/freq  : (Nc,)  Nc % (child_block_rows*128) == 0
     Padded child rows must carry freq 0 (so they contribute nothing);
     padded parent rows produce garbage that the caller slices off.
 
     Returns new parent frequencies, shape (Np,).
     """
+    pbr, cbr = parent_block_rows, child_block_rows
     np_, nc = parent_keys.shape[0], child_keys.shape[0]
-    pb, cb = PARENT_BLOCK_ROWS * LANES, CHILD_BLOCK_ROWS * LANES
+    pb, cb = pbr * LANES, cbr * LANES
     assert np_ % pb == 0 and nc % cb == 0, (np_, nc)
     n_pb, n_cb = np_ // pb, nc // cb
 
-    pk2 = parent_keys.reshape(n_pb * PARENT_BLOCK_ROWS, LANES)
-    pf2 = parent_freq.reshape(n_pb * PARENT_BLOCK_ROWS, LANES)
-    ck2 = child_keys.reshape(n_cb * CHILD_BLOCK_ROWS, LANES)
-    cf2 = child_freq.reshape(n_cb * CHILD_BLOCK_ROWS, LANES)
+    pk2 = parent_keys.reshape(n_pb * pbr, LANES)
+    pf2 = parent_freq.reshape(n_pb * pbr, LANES)
+    ck2 = child_keys.reshape(n_cb * cbr, LANES)
+    cf2 = child_freq.reshape(n_cb * cbr, LANES)
 
     kernel = functools.partial(_freq_join_kernel, mode=mode, n_child_blocks=n_cb)
     out = pl.pallas_call(
         kernel,
         grid=(n_pb, n_cb),
         in_specs=[
-            pl.BlockSpec((PARENT_BLOCK_ROWS, LANES), lambda i, j: (i, 0)),
-            pl.BlockSpec((PARENT_BLOCK_ROWS, LANES), lambda i, j: (i, 0)),
-            pl.BlockSpec((CHILD_BLOCK_ROWS, LANES), lambda i, j: (j, 0)),
-            pl.BlockSpec((CHILD_BLOCK_ROWS, LANES), lambda i, j: (j, 0)),
+            pl.BlockSpec((pbr, LANES), lambda i, j: (i, 0)),
+            pl.BlockSpec((pbr, LANES), lambda i, j: (i, 0)),
+            pl.BlockSpec((cbr, LANES), lambda i, j: (j, 0)),
+            pl.BlockSpec((cbr, LANES), lambda i, j: (j, 0)),
         ],
-        out_specs=pl.BlockSpec((PARENT_BLOCK_ROWS, LANES), lambda i, j: (i, 0)),
+        out_specs=pl.BlockSpec((pbr, LANES), lambda i, j: (i, 0)),
         out_shape=jax.ShapeDtypeStruct(pf2.shape, parent_freq.dtype),
         interpret=interpret,
     )(pk2, pf2, ck2, cf2)

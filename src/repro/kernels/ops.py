@@ -11,6 +11,20 @@ Every physical operator has two interchangeable backends:
     compose with XLA ops on every backend).
 
 Both are tested against the O(N·M) oracles in ref.py.
+
+Dispatch parameters — pallas block shapes and the XLA dense-domain
+crossover — come from a ``KernelConfig`` (``kernels/autotune.py``);
+``config=None`` means the untuned ``DEFAULT_CONFIG``.  The serving tier
+threads tuned configs per shape bucket through ``Executor``; standalone
+callers can pass one explicitly.
+
+The public entry points are deliberately NOT jitted: they resolve the
+backend (``REPRO_KERNEL_BACKEND`` is re-read on EVERY call, so flipping
+the env var between calls takes effect even for already-traced shapes)
+and the config, then dispatch to jitted implementations that carry both
+as static arguments.  Under an outer ``jax.jit`` trace the wrappers
+inline like any other Python, so compiled plans pay nothing for the
+indirection.
 """
 
 from __future__ import annotations
@@ -24,9 +38,7 @@ import jax.numpy as jnp
 from repro.kernels import freq_join as _fj
 from repro.kernels import segment_sum as _ss
 from repro.kernels import semi_join as _sj
-
-_PARENT_PAD = _fj.PARENT_BLOCK_ROWS * _fj.LANES
-_CHILD_PAD = _fj.CHILD_BLOCK_ROWS * _fj.LANES
+from repro.kernels.autotune import DEFAULT_CONFIG, KernelConfig
 
 
 def default_backend() -> str:
@@ -46,11 +58,10 @@ def _pad1(a: jax.Array, n: int, fill) -> jax.Array:
 # --------------------------------------------------------------------------
 # FreqJoin
 # --------------------------------------------------------------------------
-@functools.partial(jax.jit, static_argnames=("mode", "backend", "interpret",
-                                              "domain"))
 def freq_join(parent_keys, parent_freq, child_keys, child_freq, *,
               mode: str = "sum", backend: str | None = None,
-              interpret: bool = True, domain: int | None = None):
+              interpret: bool = True, domain: int | None = None,
+              config: KernelConfig | None = None):
     """R ⋉^freq S — returns updated parent frequencies (paper §5).
 
     mode="sum": ℕ-semiring (COUNT/SUM propagation);
@@ -61,18 +72,36 @@ def freq_join(parent_keys, parent_freq, child_keys, child_freq, *,
     one scatter-add into a domain-sized accumulator plus one gather —
     O(N) instead of O(N log N), and on TPU the exact memory pattern of an
     embedding-gradient update (well-optimised).  Falls back to sorting when
-    the domain is unknown or too sparse to justify the accumulator.
+    the domain is unknown or too sparse to justify the accumulator; the
+    crossover comes from ``config`` (``dense_ratio``/``dense_floor``).
     """
     backend = backend or default_backend()
+    config = config or DEFAULT_CONFIG
+    return _freq_join_impl(parent_keys, parent_freq, child_keys, child_freq,
+                           mode=mode, backend=backend, interpret=interpret,
+                           domain=domain, config=config)
+
+
+@functools.partial(jax.jit, static_argnames=("mode", "backend", "interpret",
+                                             "domain", "config"))
+def _freq_join_impl(parent_keys, parent_freq, child_keys, child_freq, *,
+                    mode: str, backend: str, interpret: bool,
+                    domain: int | None, config: KernelConfig):
     if backend == "xla":
         nc = child_keys.shape[0]
-        if domain is not None and domain <= max(4 * nc, 1 << 20) \
-                and domain < (1 << 31):
+        if config.dense_ok(domain, nc):
             cf = child_freq
             if mode == "any":
                 cf = (cf > 0).astype(parent_freq.dtype)
+            # scatter-add with EXPLICIT masking: ``mode="drop"`` alone
+            # drops indices >= domain but follows NumPy semantics for
+            # negative ones (wrapping them onto valid slots), which would
+            # corrupt acc[domain-1] whenever dead/out-of-range child keys
+            # are negative — mask to zero contribution instead
+            live = (child_keys >= 0) & (child_keys < domain)
             acc = jnp.zeros((domain,), cf.dtype)
-            acc = acc.at[child_keys].add(cf, mode="drop")
+            acc = acc.at[jnp.clip(child_keys, 0, domain - 1)].add(
+                jnp.where(live, cf, 0))
             mult = acc[jnp.clip(parent_keys, 0, domain - 1)]
             mult = jnp.where(
                 (parent_keys >= 0) & (parent_keys < domain), mult, 0)
@@ -95,37 +124,51 @@ def freq_join(parent_keys, parent_freq, child_keys, child_freq, *,
         return parent_freq * mult
 
     np_, nc = parent_keys.shape[0], child_keys.shape[0]
-    npp, ncp = _round_up(np_, _PARENT_PAD), _round_up(nc, _CHILD_PAD)
+    ppad = config.parent_block_rows * _fj.LANES
+    cpad = config.child_block_rows * _fj.LANES
+    npp, ncp = _round_up(np_, ppad), _round_up(nc, cpad)
     pk = _pad1(parent_keys, npp, 0)
     pf = _pad1(parent_freq, npp, 0)
     ck = _pad1(child_keys, ncp, 0)
     cf = _pad1(child_freq, ncp, 0)  # freq-0 padding contributes nothing
     fn = _sj.semi_join_pallas if mode == "any" else functools.partial(
         _fj.freq_join_pallas, mode=mode)
-    out = fn(pk, pf, ck, cf, interpret=interpret)
+    out = fn(pk, pf, ck, cf, interpret=interpret,
+             parent_block_rows=config.parent_block_rows,
+             child_block_rows=config.child_block_rows)
     return out[:np_]
 
 
 def semi_join(parent_keys, parent_freq, child_keys, child_freq, *,
               backend: str | None = None, interpret: bool = True,
-              domain: int | None = None):
+              domain: int | None = None,
+              config: KernelConfig | None = None):
     """R ⋉ S over live tuples (0MA sweep step, paper §4.1)."""
     return freq_join(parent_keys, parent_freq, child_keys, child_freq,
                      mode="any", backend=backend, interpret=interpret,
-                     domain=domain)
+                     domain=domain, config=config)
 
 
 # --------------------------------------------------------------------------
 # Segment sum (sorted group-by-SUM)
 # --------------------------------------------------------------------------
-@functools.partial(jax.jit, static_argnames=("backend", "interpret"))
 def segment_sum_sorted(sorted_keys, values, *, backend: str | None = None,
-                       interpret: bool = True):
+                       interpret: bool = True,
+                       config: KernelConfig | None = None):
     """GROUP BY key, SUM(value) over key-sorted input.
 
     Returns (sums, valid): run total at the LAST row of each run.
     """
     backend = backend or default_backend()
+    config = config or DEFAULT_CONFIG
+    return _segment_sum_impl(sorted_keys, values, backend=backend,
+                             interpret=interpret, config=config)
+
+
+@functools.partial(jax.jit, static_argnames=("backend", "interpret",
+                                             "config"))
+def _segment_sum_impl(sorted_keys, values, *, backend: str, interpret: bool,
+                      config: KernelConfig):
     n = sorted_keys.shape[0]
     if backend == "xla":
         is_first = jnp.concatenate(
@@ -137,24 +180,26 @@ def segment_sum_sorted(sorted_keys, values, *, backend: str | None = None,
         out = jnp.where(is_last, jnp.take(sums, run_id), jnp.zeros((), values.dtype))
         return out, is_last
 
-    npad = _round_up(n, _ss.LANES_WIDE)
+    npad = _round_up(n, config.lanes_wide)
     # padded keys must sort last: use max-representable key
     maxk = jnp.asarray(jnp.iinfo(sorted_keys.dtype).max, sorted_keys.dtype)
     ks = _pad1(sorted_keys, npad, maxk)
     vs = _pad1(values, npad, 0)
-    out, valid = _ss.segment_sum_pallas(ks, vs, interpret=interpret)
+    out, valid = _ss.segment_sum_pallas(ks, vs, interpret=interpret,
+                                        lanes_wide=config.lanes_wide)
     return out[:n], valid[:n]
 
 
 def group_by_sum(keys, values, *, backend: str | None = None,
-                 interpret: bool = True):
+                 interpret: bool = True,
+                 config: KernelConfig | None = None):
     """Unsorted group-by: sort once, then segment-sum.  Returns
     (sorted_keys, sums, valid) so downstream FreqJoins can reuse the sort."""
     order = jnp.argsort(keys)
     ks = keys[order]
     vs = values[order]
     sums, valid = segment_sum_sorted(ks, vs, backend=backend,
-                                     interpret=interpret)
+                                     interpret=interpret, config=config)
     return ks, sums, valid
 
 

@@ -32,7 +32,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-LANES_WIDE = 1024  # (1, 1024) blocks: flat order == lane order
+# Default block width; (1, lanes_wide) blocks: flat order == lane order.
+# The width is a static argument so the autotuner can search it per shape
+# bucket; this constant is only the untuned default.
+LANES_WIDE = 1024
 
 
 def _seg_comb(a, b):
@@ -43,7 +46,8 @@ def _seg_comb(a, b):
 
 
 def _segment_sum_kernel(keys_ref, pkeys_ref, nkeys_ref, vals_ref,
-                        out_ref, valid_ref, carry_ref, *, n_total: int):
+                        out_ref, valid_ref, carry_ref, *, n_total: int,
+                        lanes_wide: int):
     j = pl.program_id(0)
 
     @pl.when(j == 0)
@@ -55,8 +59,8 @@ def _segment_sum_kernel(keys_ref, pkeys_ref, nkeys_ref, vals_ref,
     nkeys = nkeys_ref[0, :]
     v = vals_ref[0, :]
 
-    gpos = j * LANES_WIDE + jax.lax.broadcasted_iota(
-        jnp.int32, (1, LANES_WIDE), 1
+    gpos = j * lanes_wide + jax.lax.broadcasted_iota(
+        jnp.int32, (1, lanes_wide), 1
     )[0, :]
     starts = (keys != pkeys) | (gpos == 0)
     is_last = (keys != nkeys) | (gpos == n_total - 1)
@@ -71,36 +75,38 @@ def _segment_sum_kernel(keys_ref, pkeys_ref, nkeys_ref, vals_ref,
     valid_ref[0, :] = is_last.astype(jnp.int32)
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
-def segment_sum_pallas(sorted_keys, values, *, interpret: bool = False):
+@functools.partial(jax.jit, static_argnames=("interpret", "lanes_wide"))
+def segment_sum_pallas(sorted_keys, values, *, interpret: bool = False,
+                       lanes_wide: int = LANES_WIDE):
     """Segmented sum over key-sorted arrays.
 
-    Contract: len % LANES_WIDE == 0; padded tail rows sort last (keys >= all
+    Contract: len % lanes_wide == 0; padded tail rows sort last (keys >= all
     real keys) and carry value 0.  Returns (sums, valid) with run totals at
     the last row of each run.
     """
     n = sorted_keys.shape[0]
-    assert n % LANES_WIDE == 0, n
-    n_blocks = n // LANES_WIDE
+    assert n % lanes_wide == 0, n
+    n_blocks = n // lanes_wide
 
     pkeys = jnp.roll(sorted_keys, 1)
     nkeys = jnp.roll(sorted_keys, -1)
 
     def as2d(a):
-        return a.reshape(n_blocks, LANES_WIDE)
+        return a.reshape(n_blocks, lanes_wide)
 
-    kernel = functools.partial(_segment_sum_kernel, n_total=n)
+    kernel = functools.partial(_segment_sum_kernel, n_total=n,
+                               lanes_wide=lanes_wide)
     out, valid = pl.pallas_call(
         kernel,
         grid=(n_blocks,),
-        in_specs=[pl.BlockSpec((1, LANES_WIDE), lambda j: (j, 0))] * 4,
+        in_specs=[pl.BlockSpec((1, lanes_wide), lambda j: (j, 0))] * 4,
         out_specs=[
-            pl.BlockSpec((1, LANES_WIDE), lambda j: (j, 0)),
-            pl.BlockSpec((1, LANES_WIDE), lambda j: (j, 0)),
+            pl.BlockSpec((1, lanes_wide), lambda j: (j, 0)),
+            pl.BlockSpec((1, lanes_wide), lambda j: (j, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((n_blocks, LANES_WIDE), values.dtype),
-            jax.ShapeDtypeStruct((n_blocks, LANES_WIDE), jnp.int32),
+            jax.ShapeDtypeStruct((n_blocks, lanes_wide), values.dtype),
+            jax.ShapeDtypeStruct((n_blocks, lanes_wide), jnp.int32),
         ],
         scratch_shapes=[pltpu.SMEM((1, 1), values.dtype)],
         interpret=interpret,

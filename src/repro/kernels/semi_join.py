@@ -50,31 +50,36 @@ def _semi_join_kernel(pk_ref, pf_ref, ck_ref, cf_ref, out_ref, *,
         out_ref[...] = pf_ref[...] * out_ref[...]
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("interpret",
+                                             "parent_block_rows",
+                                             "child_block_rows"))
 def semi_join_pallas(parent_keys, parent_freq, child_keys, child_freq,
-                     *, interpret: bool = False):
+                     *, interpret: bool = False,
+                     parent_block_rows: int = PARENT_BLOCK_ROWS,
+                     child_block_rows: int = CHILD_BLOCK_ROWS):
     """Blocked semi-join; same padding contract as freq_join_pallas."""
+    pbr, cbr = parent_block_rows, child_block_rows
     np_, nc = parent_keys.shape[0], child_keys.shape[0]
-    pb, cb = PARENT_BLOCK_ROWS * LANES, CHILD_BLOCK_ROWS * LANES
+    pb, cb = pbr * LANES, cbr * LANES
     assert np_ % pb == 0 and nc % cb == 0, (np_, nc)
     n_pb, n_cb = np_ // pb, nc // cb
 
-    pk2 = parent_keys.reshape(n_pb * PARENT_BLOCK_ROWS, LANES)
-    pf2 = parent_freq.reshape(n_pb * PARENT_BLOCK_ROWS, LANES)
-    ck2 = child_keys.reshape(n_cb * CHILD_BLOCK_ROWS, LANES)
-    cf2 = child_freq.reshape(n_cb * CHILD_BLOCK_ROWS, LANES)
+    pk2 = parent_keys.reshape(n_pb * pbr, LANES)
+    pf2 = parent_freq.reshape(n_pb * pbr, LANES)
+    ck2 = child_keys.reshape(n_cb * cbr, LANES)
+    cf2 = child_freq.reshape(n_cb * cbr, LANES)
 
     kernel = functools.partial(_semi_join_kernel, n_child_blocks=n_cb)
     out = pl.pallas_call(
         kernel,
         grid=(n_pb, n_cb),
         in_specs=[
-            pl.BlockSpec((PARENT_BLOCK_ROWS, LANES), lambda i, j: (i, 0)),
-            pl.BlockSpec((PARENT_BLOCK_ROWS, LANES), lambda i, j: (i, 0)),
-            pl.BlockSpec((CHILD_BLOCK_ROWS, LANES), lambda i, j: (j, 0)),
-            pl.BlockSpec((CHILD_BLOCK_ROWS, LANES), lambda i, j: (j, 0)),
+            pl.BlockSpec((pbr, LANES), lambda i, j: (i, 0)),
+            pl.BlockSpec((pbr, LANES), lambda i, j: (i, 0)),
+            pl.BlockSpec((cbr, LANES), lambda i, j: (j, 0)),
+            pl.BlockSpec((cbr, LANES), lambda i, j: (j, 0)),
         ],
-        out_specs=pl.BlockSpec((PARENT_BLOCK_ROWS, LANES), lambda i, j: (i, 0)),
+        out_specs=pl.BlockSpec((pbr, LANES), lambda i, j: (i, 0)),
         out_shape=jax.ShapeDtypeStruct(pf2.shape, parent_freq.dtype),
         interpret=interpret,
     )(pk2, pf2, ck2, cf2)

@@ -5,8 +5,9 @@ many.  This package owns everything between "SQL arrives" and "compiled
 program runs": query fingerprinting (``fingerprint``), the multi-level
 plan cache (``plan_cache``), the persistent cross-process plan store
 (``plan_store``), the concurrent micro-batching engine (``engine``), the
-async cross-caller batch former (``scheduler``), and the tracing +
-metrics registry every request reports into (``observability``).
+async cross-caller batch former (``scheduler``), the persistent
+tuned-kernel-config store (``tune_store``), and the tracing + metrics
+registry every request reports into (``observability``).
 """
 
 from repro.service.engine import (
@@ -34,6 +35,7 @@ from repro.service.plan_store import (
     store_fingerprint,
 )
 from repro.service.scheduler import AsyncScheduler
+from repro.service.tune_store import TuneStore
 
 __all__ = [
     "AdmissionError",
@@ -52,6 +54,7 @@ __all__ = [
     "QueryResult",
     "QueryService",
     "ServeStats",
+    "TuneStore",
     "schema_fingerprint",
     "store_fingerprint",
 ]

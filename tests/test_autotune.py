@@ -1,0 +1,395 @@
+"""Kernel autotuner + TuneStore: measured search, bitwise gate,
+persistence discipline (corruption / version skew / read-only), service
+warm starts, export/import, and the tooling that rides along (the
+``report.py --compare`` perf diff and the block-shape lint rule).
+
+Mirrors ``test_plan_store.py``'s structure: the store tests damage one
+entry at a time and assert skip-and-evict (own dir) vs skip-in-place
+(foreign dir); the service tests assert the ``tune_searches == 0``
+warm-restart invariant — the tuning twin of ``plan_builds == 0``.
+"""
+
+import hashlib
+import importlib.util
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import make_tpch_db
+from repro.kernels import ops
+from repro.kernels.autotune import (
+    DEFAULT_CONFIG,
+    KernelConfig,
+    KernelTuner,
+    TuneTable,
+    bucket_shape,
+    candidate_configs,
+)
+from repro.service import QueryService
+from repro.service.tune_store import (
+    TUNE_FORMAT_VERSION,
+    TuneStore,
+    _canonical_body,
+)
+
+jax.config.update("jax_platform_name", "cpu")
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+COSTLY_PARTS = """
+SELECT SUM(ps.ps_supplycost), COUNT(*)
+FROM partsupp ps, part p
+WHERE ps.ps_partkey = p.p_partkey AND p.p_price > 1500.0
+"""
+
+
+# ---------------------------------------------------------------------------
+# config space + table
+# ---------------------------------------------------------------------------
+def test_bucket_shape_power_of_two():
+    assert bucket_shape(1000, 37) == (1024, 64)
+    assert bucket_shape(1024) == (1024,)
+    assert bucket_shape(1025) == (2048,)
+    assert bucket_shape(1) == (1,)
+
+
+def test_candidates_always_include_default():
+    for kernel in ("freq_join", "semi_join", "segment_sum"):
+        for backend in ("xla", "pallas"):
+            cands = candidate_configs(kernel, backend)
+            assert DEFAULT_CONFIG in cands
+            assert len(cands) == len(set(cands))  # hashable + distinct
+    with pytest.raises(ValueError, match="unknown kernel"):
+        candidate_configs("hash_join", "xla")
+
+
+def test_tune_table_buckets_lookups():
+    """Within-bucket sizes share one entry; crossing the boundary misses
+    — the exact invariant that keeps within-bucket growth retune-free."""
+    t = TuneTable()
+    cfg = KernelConfig(dense_ratio=99)
+    t.install("freq_join", (1000, 37), "xla", cfg)
+    assert t.lookup("freq_join", (1024, 64), "xla") == cfg
+    assert t.lookup("freq_join", (513, 33), "xla") == cfg
+    assert t.lookup("freq_join", (1025, 64), "xla") is None   # next bucket
+    assert t.lookup("freq_join", (1024, 64), "pallas") is None
+    assert t.lookup("semi_join", (1024, 64), "xla") is None
+    assert len(t) == 1
+
+
+def test_search_gates_and_returns_candidate(tmp_path):
+    """A real (tiny) measured search: the winner is a candidate, every
+    measurement covers a candidate that passed the gate, and the result
+    is persisted for the next process."""
+    store = TuneStore(tmp_path)
+    tuner = KernelTuner(store, backend="xla", repeats=1)
+    cfg = tuner.ensure("freq_join", (256, 256))
+    assert cfg in candidate_configs("freq_join", "xla")
+    m = tuner.metrics()
+    assert m["tune_searches"] == 1
+    assert m["tune_candidates"] == len(candidate_configs("freq_join",
+                                                         "xla"))
+    assert m["tune_gate_rejects"] == 0
+    assert m["tune_entries"] == 1
+    # repeat: resolved from the table, no new search
+    assert tuner.ensure("freq_join", (200, 200)) == cfg
+    assert tuner.metrics()["tune_searches"] == 1
+    # fresh tuner, same store: resolved from disk, no new search
+    t2 = KernelTuner(TuneStore(tmp_path), backend="xla")
+    assert t2.ensure("freq_join", (256, 256)) == cfg
+    m2 = t2.metrics()
+    assert m2["tune_searches"] == 0 and m2["tune_store_hits"] == 1
+
+
+class _DivergingTuner(KernelTuner):
+    """Scenario stub whose answer DEPENDS on the config: every
+    non-default candidate diverges bitwise, so the gate must reject all
+    of them and the default must win regardless of timings."""
+
+    def _scenarios(self, kernel, bshape):
+        return [("stub", lambda cfg: jnp.asarray([cfg.lanes_wide]))]
+
+
+def test_bitwise_gate_rejects_diverging_candidates():
+    tuner = _DivergingTuner(None, backend="pallas", repeats=1)
+    cfg, measurements = tuner.search("segment_sum", (1024,))
+    assert cfg == DEFAULT_CONFIG
+    n_cands = len(candidate_configs("segment_sum", "pallas"))
+    assert tuner.counters["tune_gate_rejects"] == n_cands - 1
+    assert list(measurements) == ["lanes1024"]    # only the survivor
+
+
+# ---------------------------------------------------------------------------
+# TuneStore discipline (mirrors the plan store's)
+# ---------------------------------------------------------------------------
+def _single_entry(store: TuneStore):
+    paths = list(store.tune_dir.glob("*.json"))
+    assert len(paths) == 1
+    return paths[0]
+
+
+def test_store_roundtrip_across_instances(tmp_path):
+    cfg = KernelConfig(lanes_wide=2048, dense_ratio=32)
+    store = TuneStore(tmp_path)
+    assert store.save("segment_sum", (4096,), "pallas", cfg,
+                      measurements={"lanes2048": 0.001})
+    assert store.metrics()["tune_persist_writes"] == 1
+
+    fresh = TuneStore(tmp_path)
+    assert fresh.load("segment_sum", (4096,), "pallas") == cfg
+    assert fresh.load("segment_sum", (8192,), "pallas") is None
+    m = fresh.metrics()
+    assert m["tune_persist_hits"] == 1 and m["tune_persist_misses"] == 1
+    assert m["tune_persist_entries"] == 1
+    assert list(fresh.load_all()) == [
+        (("segment_sum", (4096,), "pallas"), cfg)]
+
+
+@pytest.mark.parametrize("damage", ["truncated", "flipped", "version",
+                                    "key", "fields"])
+def test_corrupt_entries_skipped_and_evicted(tmp_path, damage):
+    """Truncation, payload bit-flips, format-version skew, key-field
+    mismatch, and config-schema drift all skip + evict + count — never
+    raise, never serve a damaged config."""
+    store = TuneStore(tmp_path)
+    store.save("freq_join", (1024, 1024), "xla",
+               KernelConfig(dense_ratio=32))
+    path = _single_entry(store)
+    raw = path.read_bytes()
+    doc = json.loads(raw)
+    if damage == "truncated":
+        path.write_bytes(raw[:len(raw) // 2])
+    elif damage == "flipped":
+        doc["payload"]["config"]["dense_ratio"] = 64   # checksum mismatch
+        path.write_text(json.dumps(doc))
+    elif damage == "version":
+        doc["format_version"] = TUNE_FORMAT_VERSION + 99
+        path.write_text(json.dumps(doc))
+    elif damage == "key":
+        doc["kernel"] = "semi_join"                    # moved-file aliasing
+        path.write_text(json.dumps(doc))
+    else:  # fields: checksum VALID but the config schema drifted
+        doc["payload"]["config"]["warp_rows"] = 4
+        doc["payload_sha256"] = hashlib.sha256(
+            _canonical_body(doc["payload"])).hexdigest()
+        path.write_text(json.dumps(doc))
+
+    fresh = TuneStore(tmp_path)
+    assert fresh.load("freq_join", (1024, 1024), "xla") is None
+    m = fresh.metrics()
+    assert m["tune_persist_corrupt_skipped"] == 1
+    assert m["tune_persist_hits"] == 0
+    assert not path.exists()                           # evicted
+
+
+def test_load_all_from_foreign_dir_never_evicts(tmp_path):
+    """``load_all`` (import/export path) skips damaged entries IN PLACE —
+    the directory may be another service's live store."""
+    store = TuneStore(tmp_path)
+    store.save("freq_join", (512, 512), "xla", KernelConfig())
+    path = _single_entry(store)
+    path.write_bytes(path.read_bytes()[:40])
+    reader = TuneStore(tmp_path)
+    assert list(reader.load_all()) == []
+    assert reader.metrics()["tune_persist_corrupt_skipped"] == 1
+    assert path.exists()                               # NOT deleted
+
+
+def test_topology_scopes_entries(tmp_path):
+    """Different topologies never alias: per-shard buckets tune
+    differently, so a mesh service must not read a local service's
+    winners."""
+    local = TuneStore(tmp_path)
+    mesh = TuneStore(tmp_path, topology=(("dp",), (4,)))
+    local.save("freq_join", (1024, 1024), "xla",
+               KernelConfig(dense_ratio=32))
+    assert mesh.load("freq_join", (1024, 1024), "xla") is None
+    assert local.tune_dir != mesh.tune_dir
+
+
+def test_unwritable_store_degrades(tmp_path):
+    """Write failure (dir replaced by a file — root-proof sabotage, as in
+    the plan-store test) returns False + counts; loads simply miss.  The
+    tuner keeps working in memory."""
+    store = TuneStore(tmp_path)
+    for p in store.tune_dir.glob("*"):
+        p.unlink()
+    store.tune_dir.rmdir()
+    store.tune_dir.write_text("not a directory")
+    assert store.save("freq_join", (64, 64), "xla", KernelConfig()) is False
+    m = store.metrics()
+    assert m["tune_persist_write_errors"] == 1
+    assert m["tune_persist_writes"] == 0
+    tuner = KernelTuner(store, backend="xla", repeats=1)
+    cfg = tuner.ensure("freq_join", (64, 64))          # search still works
+    assert cfg in candidate_configs("freq_join", "xla")
+    assert tuner.metrics()["tune_searches"] == 1
+
+
+# ---------------------------------------------------------------------------
+# service integration: warm restarts, export/import, backend re-read
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def tpch():
+    db, schema = make_tpch_db(scale=20, seed=5)
+    return db, schema
+
+
+def test_service_autotune_and_warm_restart(tmp_path, tpch):
+    """Cold service: ``autotune()`` measures and persists.  Warm service
+    over the same cache_dir: ``tune_searches == 0`` (the plan cache's
+    ``plan_builds == 0``, for kernels) and answers stay bitwise
+    identical."""
+    db, schema = tpch
+    kernels = ("freq_join", "segment_sum")             # keep the test fast
+    svc = QueryService(db, schema, cache_dir=tmp_path)
+    baseline = svc.submit(COSTLY_PARTS)
+    assert baseline.error is None
+    r = svc.autotune(kernels=kernels)
+    assert r["searches"] > 0
+    assert r["installed"] == r["searches"] > 0
+    assert r["gate_rejects"] == 0
+    assert r["invalidated_executables"] >= 1           # exec level dropped
+    tuned = svc.submit(COSTLY_PARTS)
+    for k, v in baseline.values.items():
+        np.testing.assert_array_equal(np.asarray(v),
+                                      np.asarray(tuned.values[k]))
+    m = svc.metrics()
+    assert m["tune_searches"] == r["searches"]
+    assert m["tune_persist_writes"] == r["searches"]
+
+    warm = QueryService(db, schema, cache_dir=tmp_path)
+    r2 = warm.autotune(kernels=kernels)
+    assert r2["searches"] == 0                         # nothing re-measured
+    assert r2["invalidated_executables"] == 0          # nothing recompiled
+    assert r2["entries"] >= r["searches"]
+    m2 = warm.metrics()
+    assert m2["tune_searches"] == 0
+    assert m2["tune_store_hits"] > 0
+    res = warm.submit(COSTLY_PARTS)
+    for k, v in baseline.values.items():
+        np.testing.assert_array_equal(np.asarray(v),
+                                      np.asarray(res.values[k]))
+
+
+def test_autotune_idempotent_within_process(tpch):
+    """A second ``autotune()`` on the SAME service resolves everything
+    from the in-memory table: zero searches, zero invalidation (no
+    cache_dir needed)."""
+    db, schema = tpch
+    svc = QueryService(db, schema)
+    r1 = svc.autotune(kernels=("segment_sum",))
+    assert r1["searches"] > 0
+    r2 = svc.autotune(kernels=("segment_sum",))
+    assert r2["searches"] == 0 and r2["installed"] == 0
+    assert r2["invalidated_executables"] == 0
+
+
+def test_export_import_carries_tune_entries(tmp_path, tpch):
+    db, schema = tpch
+    svc = QueryService(db, schema)                     # no cache_dir
+    svc.submit(COSTLY_PARTS)
+    svc.autotune(kernels=("segment_sum",))
+    entries = dict(svc.tuner.table.entries())
+    assert entries
+    svc.export_cache(tmp_path / "exported")
+
+    svc2 = QueryService(db, schema)
+    assert len(svc2.tuner.table) == 0
+    svc2.import_cache(tmp_path / "exported")
+    assert dict(svc2.tuner.table.entries()) == entries
+    # and the importer re-measures nothing for those buckets
+    r = svc2.autotune(kernels=("segment_sum",))
+    assert r["searches"] == 0
+
+
+def test_backend_env_is_reread_every_call(monkeypatch):
+    """Regression: the backend env var used to be read at TRACE time
+    inside the jitted op — flipping ``REPRO_KERNEL_BACKEND`` between
+    calls was silently ignored for already-traced shapes.  The public
+    wrappers must re-resolve it on every call."""
+    monkeypatch.delenv("REPRO_KERNEL_BACKEND", raising=False)
+    rng = np.random.default_rng(0)
+    pk = jnp.asarray(rng.integers(0, 10, 131), jnp.int32)
+    pf = jnp.ones_like(pk)
+    ck = jnp.asarray(rng.integers(0, 10, 131), jnp.int32)
+    cf = jnp.ones_like(ck)
+    a = ops.freq_join(pk, pf, ck, cf)                  # default: xla
+
+    called = {}
+    real = ops._fj.freq_join_pallas
+
+    def spy(*args, **kw):
+        called["pallas"] = True
+        return real(*args, **kw)
+
+    monkeypatch.setattr(ops._fj, "freq_join_pallas", spy)
+    monkeypatch.setenv("REPRO_KERNEL_BACKEND", "pallas")
+    b = ops.freq_join(pk, pf, ck, cf)                  # SAME shapes
+    assert called.get("pallas"), \
+        "env flip ignored: pallas kernel never dispatched"
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# tooling satellites: report --compare and the block-shape lint rule
+# ---------------------------------------------------------------------------
+def _load_module(name, rel_path):
+    spec = importlib.util.spec_from_file_location(
+        name, os.path.join(REPO, rel_path))
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+def _bench_doc(rows):
+    return {"bench_schema_version": 1, "benchmark": "t",
+            "created_unix": 0.0, "meta": {}, "metrics": {},
+            "histograms": {},
+            "rows": [{"section": "s", "name": n, "us_per_call": us,
+                      "derived": ""} for n, us in rows]}
+
+
+def test_report_compare_flags_regressions(tmp_path):
+    report = _load_module("bench_report", "benchmarks/report.py")
+    old = tmp_path / "old.json"
+    new = tmp_path / "new.json"
+    old.write_text(json.dumps(_bench_doc(
+        [("a", 100.0), ("b", 50.0), ("gone", 1.0), ("untimed", None)])))
+    new.write_text(json.dumps(_bench_doc(
+        [("a", 100.0), ("b", 200.0), ("fresh", 1.0), ("untimed", None)])))
+    assert report.compare(str(old), str(new)) == 3     # b regressed 4x
+    assert report.compare(str(old), str(old)) == 0
+    assert report.compare(str(old), str(new), threshold=5.0) == 0
+    assert report.compare(str(tmp_path / "absent.json"), str(new)) == 2
+    (tmp_path / "junk.json").write_text("{not json")
+    assert report.compare(str(tmp_path / "junk.json"), str(new)) == 2
+
+
+def test_lint_block_shape_discipline(tmp_path):
+    lint = _load_module("repro_lint", "scripts/lint.py")
+    bad = tmp_path / "src" / "repro" / "service"
+    bad.mkdir(parents=True)
+    (bad / "sneaky.py").write_text("PARENT_BLOCK_ROWS = 4\n")
+    assert lint._block_shape_discipline([str(tmp_path)]) == 1
+
+    (bad / "sneaky.py").write_text("# PARENT_BLOCK_ROWS in a comment\n"
+                                   "x = 1\n")
+    assert lint._block_shape_discipline([str(tmp_path)]) == 0
+
+    ok = tmp_path / "src" / "repro" / "kernels"
+    ok.mkdir(parents=True)
+    (ok / "blocks.py").write_text("LANES_WIDE = 1024\n")
+    exempt = tmp_path / "tests"
+    exempt.mkdir()
+    (exempt / "test_x.py").write_text("CHILD_BLOCK_ROWS = 8\n")
+    assert lint._block_shape_discipline([str(tmp_path)]) == 0
+
+    # ...and the real tree is clean
+    assert lint._block_shape_discipline(
+        [os.path.join(REPO, "src"), os.path.join(REPO, "benchmarks"),
+         os.path.join(REPO, "examples")]) == 0

@@ -17,6 +17,7 @@ except ModuleNotFoundError:
     HAVE_HYPOTHESIS = False
 
 from repro.kernels import ops, ref
+from repro.kernels.autotune import DENSE_DOMAIN_CAP, KernelConfig
 
 jax.config.update("jax_platform_name", "cpu")
 
@@ -100,6 +101,112 @@ def test_weighted_percentile_expansion_equivalence():
     # lower-interpolation median of [1,1,1,3,3,5]
     want = float(np.sort(expanded)[max(0, int(np.ceil(0.5 * len(expanded))) - 1)])
     assert got == want
+
+
+# ---------------------------------------------------------------------------
+# Config-space parametrisation (kernels/autotune.py): every point the
+# tuner may pick must match the oracles bitwise, including on shapes that
+# don't divide the configured blocks (padding correctness per config).
+# ---------------------------------------------------------------------------
+JOIN_CONFIGS = [
+    KernelConfig(),
+    KernelConfig(parent_block_rows=16, child_block_rows=8),
+    KernelConfig(parent_block_rows=8, child_block_rows=16),
+    KernelConfig(parent_block_rows=32, child_block_rows=32),
+    KernelConfig(dense_ratio=0),          # sort/searchsorted always
+    KernelConfig(dense_ratio=256),        # dense scatter-add eagerly
+]
+_JIDS = ["default", "pb16cb8", "pb8cb16", "pb32cb32", "sort", "dense"]
+
+
+@pytest.mark.parametrize("config", JOIN_CONFIGS, ids=_JIDS)
+@pytest.mark.parametrize("np_,nc", [(1000, 37), (2048, 1024), (8, 8)])
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_freq_join_config_space_matches_oracle(config, np_, nc, backend):
+    rng = np.random.default_rng(np_ * 13 + nc)
+    pk, pf, ck, cf = _rand_tables(rng, np_, nc, key_range=50,
+                                  kdt=jnp.int32, fdt=jnp.int32)
+    got = ops.freq_join(pk, pf, ck, cf, mode="sum", backend=backend,
+                        domain=50, config=config)
+    want = ref.freq_join_ref(pk, pf, ck, cf)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    got_semi = ops.semi_join(pk, pf, ck, cf, backend=backend,
+                             domain=50, config=config)
+    want_semi = ref.semi_join_ref(pk, pf, ck, cf)
+    np.testing.assert_array_equal(np.asarray(got_semi),
+                                  np.asarray(want_semi))
+
+
+@pytest.mark.parametrize("lanes", [512, 1024, 2048])
+@pytest.mark.parametrize("n", [1000, 17, 4096])
+@pytest.mark.parametrize("backend", ["xla", "pallas"])
+def test_segment_sum_config_space_matches_default(lanes, n, backend):
+    """Any lane width produces bitwise the default's output — the tuner's
+    gate invariant, checked directly (incl. non-divisible lengths)."""
+    rng = np.random.default_rng(n * 3 + lanes)
+    keys = jnp.sort(jnp.asarray(rng.integers(0, max(2, n // 8), n),
+                                jnp.int32))
+    vals = jnp.asarray(rng.integers(-3, 5, n), jnp.int32)
+    base = ops.segment_sum_sorted(keys, vals, backend=backend)
+    got = ops.segment_sum_sorted(keys, vals, backend=backend,
+                                 config=KernelConfig(lanes_wide=lanes))
+    for b, g in zip(base, got):
+        np.testing.assert_array_equal(np.asarray(b), np.asarray(g))
+
+
+# ---------------------------------------------------------------------------
+# Dense-domain dispatch boundary
+# ---------------------------------------------------------------------------
+def test_dense_ok_boundary_and_cap():
+    cfg = KernelConfig(dense_ratio=4, dense_floor=1 << 10)
+    assert cfg.dense_ok(1 << 10, 8)            # at the floor: dense
+    assert not cfg.dense_ok((1 << 10) + 1, 8)  # just past: sort
+    low_floor = KernelConfig(dense_ratio=4, dense_floor=1)
+    assert low_floor.dense_ok(4 * 100, 100)    # at ratio*nc: dense
+    assert not low_floor.dense_ok(4 * 100 + 1, 100)
+    assert not cfg.dense_ok(None, 100)         # unknown domain: sort
+    assert not KernelConfig(dense_ratio=0).dense_ok(16, 100)  # disabled
+    # the structural int32 accumulator cap binds whatever the ratio says
+    eager = KernelConfig(dense_ratio=1 << 30, dense_floor=1 << 30)
+    assert not eager.dense_ok(DENSE_DOMAIN_CAP, 100)
+    assert eager.dense_ok(DENSE_DOMAIN_CAP - 1, 100) is True
+
+
+def test_dense_domain_cap_falls_back_to_sort():
+    """domain == 2^31 with a dense-eager config must quietly use the sort
+    path (no 2 GiB accumulator) and still match the oracle."""
+    rng = np.random.default_rng(7)
+    pk, pf, ck, cf = _rand_tables(rng, 64, 64, key_range=40,
+                                  kdt=jnp.int32, fdt=jnp.int32)
+    cfg = KernelConfig(dense_ratio=1 << 30, dense_floor=1 << 30)
+    got = ops.freq_join(pk, pf, ck, cf, backend="xla",
+                        domain=DENSE_DOMAIN_CAP, config=cfg)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(ref.freq_join_ref(pk, pf,
+                                                               ck, cf)))
+
+
+@pytest.mark.parametrize("mode", ["sum", "any"])
+def test_dense_path_masks_negative_and_oob_child_keys(mode):
+    """Regression: ``.at[].add(mode="drop")`` wraps NEGATIVE indices
+    (NumPy semantics) even though it drops too-large ones — a dead child
+    tuple marked with key -1 must contribute nothing, not corrupt
+    ``acc[domain-1]``.  Dense and sort dispatch must agree bitwise."""
+    dom = 64
+    pk = jnp.asarray([0, 5, dom - 1, 63, 12], jnp.int32)
+    pf = jnp.asarray([1, 2, 3, 4, 5], jnp.int32)
+    # child keys: valid, -1 (dead), dom (OOB-high), valid dup of dom-1
+    ck = jnp.asarray([5, -1, dom, dom - 1, -1, 12], jnp.int32)
+    cf = jnp.asarray([7, 9, 11, 2, 100, 1], jnp.int32)
+    dense = ops.freq_join(pk, pf, ck, cf, mode=mode, backend="xla",
+                          domain=dom,
+                          config=KernelConfig(dense_ratio=1 << 20))
+    sort = ops.freq_join(pk, pf, ck, cf, mode=mode, backend="xla",
+                         domain=dom, config=KernelConfig(dense_ratio=0))
+    want = ref.freq_join_ref(pk, pf, ck, cf) if mode == "sum" \
+        else ref.semi_join_ref(pk, pf, ck, cf)
+    np.testing.assert_array_equal(np.asarray(dense), np.asarray(want))
+    np.testing.assert_array_equal(np.asarray(dense), np.asarray(sort))
 
 
 # ---------------------------------------------------------------------------
