@@ -102,10 +102,20 @@ def compare(old_path: str, new_path: str, threshold: float = 1.25) -> int:
             tag = "  improved"
         label = "/".join(p for p in key if p)
         print(f"{label[:48]:48s} {o:12.1f} {n:12.1f} {ratio:7.2f}{tag}")
-    for side, keys in (("only in old", set(old) - set(new)),
-                       ("only in new", set(new) - set(old))):
-        for key in sorted(keys):
-            print(f"# {side}: {'/'.join(p for p in key if p)}")
+    # coverage drift is a first-class signal, not a footnote: a renamed
+    # or dropped scenario silently shrinks what the regression gate sees
+    removed = sorted(set(old) - set(new))
+    added = sorted(set(new) - set(old))
+    if removed:
+        print(f"removed rows ({len(removed)} — timed in old only):")
+        for key in removed:
+            print(f"  - {'/'.join(p for p in key if p)}")
+    if added:
+        print(f"added rows ({len(added)} — timed in new only):")
+        for key in added:
+            print(f"  + {'/'.join(p for p in key if p)}")
+    if not removed and not added:
+        print("row coverage unchanged: no rows added or removed")
     if regressions:
         worst = max(regressions, key=lambda kr: kr[1])
         print(f"compare: {len(regressions)} regression(s) > "

@@ -24,11 +24,13 @@ measures the properties the serving tier exists for:
      calls — and a malformed query in the window fails only its own
      future while every valid batch-mate is still answered;
   7. RESTART warm start: two successive *processes* share a ``cache_dir``.
-     The first (cold) persists every plan and XLA executable; the second
-     (warm) must answer the same query mix with ZERO plan rebuilds
-     (``plan_builds == 0``, ``persist_hits`` == distinct fingerprints),
-     bitwise-identical answers, and — in the timed run — a lower
-     startup-to-answers wall-clock than the cold process.
+     The first (cold) persists every plan, XLA executable, and table
+     statistic; the second (warm) must answer the same query mix with
+     ZERO plan rebuilds (``plan_builds == 0``, ``persist_hits`` ==
+     distinct fingerprints), ZERO statistics recomputes
+     (``stat_refreshes == 0``), a gating-decision trace identical to the
+     cold process's, bitwise-identical answers, and — in the timed run —
+     a lower startup-to-answers wall-clock than the cold process.
 
     PYTHONPATH=src python benchmarks/serving_queries.py [--tiny] [--smoke]
 
@@ -49,11 +51,22 @@ measures the properties the serving tier exists for:
      re-plan nothing (``plan_builds == 0``) — the same serving
      guarantees, one graph interpreter, beyond one device.
 
-``--smoke`` runs only the fused-batching + mixed-shape + async + restart
-+ observability + mesh scenarios on tiny tables and asserts cache/
-fusion/scheduler/persistence counters and answer identity (plus the
-tracing overhead gate) — what ``scripts/verify.sh --smoke`` runs so
-serving regressions fail CI fast.  ``--record [PATH]`` writes a
+ 10. MIS-FUSION gate: a cheap 3-way lookup whose op DAG overlaps two
+     expensive 5-way dashboards.  Overlap grouping alone would fuse all
+     three, so every lookup pays the dashboards' latency; the default
+     cost-calibrated admission must band the lookup out
+     (``fusion_cost_rejects``) while still fusing the two dashboards,
+     its p95 engine-measured serve time must beat the ungated
+     ``fusion_disparity=float("inf")`` baseline, answers must stay
+     bitwise-identical, and a forced serve-time regression on the fused
+     pair must demote it on the very next batch (``fusion_demotions``).
+
+``--smoke`` runs only the fused-batching + mixed-shape + async +
+mis-fusion + restart + observability + mesh scenarios on tiny tables and
+asserts cache/fusion/scheduler/persistence/calibration counters and
+answer identity (plus the tracing overhead and mis-fusion p95 gates) —
+what ``scripts/verify.sh --smoke`` runs so serving regressions fail CI
+fast.  ``--record [PATH]`` writes a
 schema-versioned ``BENCH_serving.json`` (rows + per-stage histogram
 snapshots + counters; validated by ``python -m benchmarks.recorder``).
 """
@@ -181,6 +194,27 @@ MIXED_SHAPE_QUERIES = [
     ("mix-2way", MIX_2WAY),
 ]
 
+# ---- MIS-FUSION workload (cost-calibrated admission + feedback) ------------
+# A cheap 3-way lookup whose op DAG overlaps two expensive 5-way dashboards
+# (shared filtered-region scan + nation/supplier semi-join chain).  Overlap
+# grouping alone would fuse all three into ONE program, so every lookup
+# would pay the 5-way program's latency — the mis-fusion the cost gate
+# exists to prevent.  The gated (default) service must band the lookup out
+# (``fusion_cost_rejects``) while still fusing the two bigs; the ungated
+# baseline (``fusion_disparity=float("inf")``) fuses everything.
+FIG1_SUM = """
+SELECT SUM(s.s_acctbal)
+FROM region r, nation n, supplier s, partsupp ps, part p
+WHERE r.r_regionkey = n.n_regionkey AND n.n_nationkey = s.s_nationkey
+  AND s.s_suppkey = ps.ps_suppkey AND ps.ps_partkey = p.p_partkey
+  AND r.r_name IN (2, 3) AND p.p_price > 1200.0
+"""
+MISFUSION_QUERIES = [
+    ("small-lookup", f"SELECT COUNT(*) {_SUPP_DIMS}"),
+    ("big-minmax", FIG1),
+    ("big-sum", FIG1_SUM),
+]
+
 
 def _values_equal(a: dict, b: dict) -> bool:
     """Bitwise equality of two QueryResult.values dicts."""
@@ -293,7 +327,10 @@ def run_fused(scale: int = 1000, repeats: int = 3, seed: int = 0):
         solo = [svc_solo.submit(sql) for sql in sqls]
     solo_s = time.perf_counter() - t0
 
-    svc_fused = QueryService(db, schema)
+    # disparity=inf: this scenario pins the fusion MACHINERY (grouping,
+    # partial fusion, subplan dedup, the fused cache) on a deliberately
+    # cost-disparate mix; admission POLICY is the mis-fusion scenario's job
+    svc_fused = QueryService(db, schema, fusion_disparity=float("inf"))
     t0 = time.perf_counter()
     for _ in range(repeats):
         fused = svc_fused.submit_many(sqls)
@@ -363,7 +400,10 @@ def run_mixed(scale: int = 1000, repeats: int = 3, seed: int = 0):
         solo = [svc_solo.submit(sql) for sql in sqls]
     solo_s = time.perf_counter() - t0
 
-    svc_fused = QueryService(db, schema)
+    # disparity=inf, as in run_fused: partial fusion across join shapes is
+    # machinery; whether these four SHOULD fuse is the admission gate's
+    # call, exercised by the mis-fusion scenario
+    svc_fused = QueryService(db, schema, fusion_disparity=float("inf"))
     t0 = time.perf_counter()
     for _ in range(repeats):
         fused = svc_fused.submit_many(sqls)
@@ -507,6 +547,108 @@ TRACING_OVERHEAD_FRAC = 0.03     # the ≤ 3% warm hot-path budget
 TRACING_OVERHEAD_FLOOR_S = 3e-4  # absolute noise floor for tiny tables
 
 
+def run_misfusion(scale: int = 1000, repeats: int = 5, seed: int = 0):
+    """Cost-gated fusion admission vs the ungated baseline, on a workload
+    built to mis-fuse: one cheap lookup + two expensive dashboards whose
+    DAGs overlap it.  Measures the lookup's engine-side serve time per
+    round under both services (warm, compile excluded), then forces an
+    observed regression on the fused big pair through the public feedback
+    surface and re-serves — the next batch must demote it."""
+    db, schema = make_tpch_db(scale=scale, seed=seed)
+    sqls = [sql for _, sql in MISFUSION_QUERIES]
+
+    gated = QueryService(db, schema)
+    ungated = QueryService(db, schema, fusion_disparity=float("inf"))
+
+    # warm both services (plans + XLA), then measure steady-state rounds
+    gated.submit_many(sqls)
+    u_first = ungated.submit_many(sqls)
+    lookup_gated_s, lookup_ungated_s = [], []
+    for _ in range(repeats):
+        g = gated.submit_many(sqls)
+        u = ungated.submit_many(sqls)
+        lookup_gated_s.append(g[0].stats.run_s)
+        lookup_ungated_s.append(u[0].stats.run_s)
+    identical = all(_values_equal(a.values, b.values)
+                    for a, b in zip(g, u))
+    fa = gated.explain(sqls[0])["fusion_admission"]
+
+    # forced regression: tell the feedback loop the fused big pair serves
+    # far slower than its solo baseline; the NEXT batch must demote it
+    big_fp = g[1].stats.fingerprint
+    big_sig = gated.explain(sqls[1])["fusion_admission"]["signature"]
+    gated.stats.observe_serve(big_fp, "", 1e-4)
+    gated.stats.observe_serve(big_fp, big_sig, 1.0)
+    gated.stats.observe_serve(big_fp, big_sig, 1.0)
+    demoted = gated.submit_many(sqls)
+    demoted_identical = all(_values_equal(a.values, b.values)
+                            for a, b in zip(g, demoted))
+
+    return {
+        "queries": len(sqls),
+        "repeats": repeats,
+        "gated_p95_s": float(np.percentile(lookup_gated_s, 95)),
+        "ungated_p95_s": float(np.percentile(lookup_ungated_s, 95)),
+        "lookup_fused_gated": g[0].stats.fused,
+        "lookup_fused_ungated": u_first[0].stats.fused,
+        "bigs_fused_gated": g[1].stats.fused and g[2].stats.fused,
+        "identical": identical,
+        "rejection": fa,
+        "bigs_fused_after_demotion": any(r.stats.fused for r in demoted),
+        "demoted_identical": demoted_identical,
+        "gated_metrics": gated.metrics(),
+        "ungated_metrics": ungated.metrics(),
+    }
+
+
+def check_misfusion(rz: dict) -> list[str]:
+    """Gate the mis-fusion scenario; returns failures.  The p95 gate runs
+    in smoke too: it compares two ENGINE-measured warm serve times whose
+    programs differ by orders of magnitude (3-way lookup vs 5-way fused
+    dashboard), not wall-clock on a noisy box."""
+    fails = []
+    gm, um = rz["gated_metrics"], rz["ungated_metrics"]
+    if rz["lookup_fused_gated"]:
+        fails.append("cost gate OFF: the cheap lookup joined the 5-way "
+                     "fusion group under the default disparity")
+    if gm["fusion_cost_rejects"] < rz["repeats"]:
+        fails.append(f"fusion_cost_rejects={gm['fusion_cost_rejects']} < "
+                     f"{rz['repeats']} — the gate is not counting its "
+                     "rejections")
+    if not rz["bigs_fused_gated"]:
+        fails.append("the two cost-compatible dashboards did not fuse "
+                     "under the gate — banding is over-rejecting")
+    if not rz["lookup_fused_ungated"]:
+        fails.append("premise broken: the ungated baseline did not fuse "
+                     "the lookup into the big program")
+    if um["fusion_cost_rejects"] != 0:
+        fails.append(f"ungated baseline counted "
+                     f"{um['fusion_cost_rejects']} cost rejects — "
+                     "disparity=inf must disable the gate")
+    if not rz["identical"]:
+        fails.append("gated answers differ from the ungated baseline — "
+                     "admission policy must never change results")
+    fa = rz["rejection"]
+    if fa is None or fa.get("admitted") or "disparity" not in \
+            str(fa.get("reason", "")):
+        fails.append("explain() does not name the cost disparity for the "
+                     f"rejected lookup (got {fa!r})")
+    if rz["gated_p95_s"] >= rz["ungated_p95_s"]:
+        fails.append(f"gated lookup p95 {rz['gated_p95_s'] * 1e3:.3f} ms "
+                     f"not below ungated {rz['ungated_p95_s'] * 1e3:.3f} "
+                     "ms — banding the lookup out bought nothing")
+    if gm["fusion_demotions"] < 1:
+        fails.append("forced serve-time regression did not demote the "
+                     "fused pair (fusion_demotions=0)")
+    if rz["bigs_fused_after_demotion"]:
+        fails.append("demoted fusion signature was re-admitted on the "
+                     "next batch")
+    if not rz["demoted_identical"]:
+        fails.append("answers changed after demotion — the feedback loop "
+                     "must only re-route, never re-answer")
+    return fails
+
+
 def run_overhead(scale: int = 1000, iters: int = 30, seed: int = 0):
     """Warm hot-path cost of tracing: one traced and one untraced
     service, same query mix, interleaved measurement rounds (drift in
@@ -603,11 +745,21 @@ def run_restart_child(cache_dir: str, scale: int, seed: int) -> dict:
     for name, sql in DISTINCT_QUERIES:
         answers[name] = _encode_values(svc.submit(sql).values)
     wall_s = time.perf_counter() - t0
+    # gating-decision digest: the machine-readable planning trace per
+    # query (explain re-serves from the warm caches — no extra builds).
+    # Cold computes stats and persists them; warm must install the same
+    # numbers from the store and reach every gate decision identically.
+    decisions = {name: svc.explain(sql)["decisions"]
+                 for name, sql in DISTINCT_QUERIES}
     m = svc.metrics()
     return {"wall_s": wall_s, "answers": answers,
+            "decisions": decisions,
             "plan_builds": m["plan_builds"],
             "compiles": m["compiles"],
             "compile_s_total": m["compile_s_total"],
+            "stat_refreshes": m["stat_refreshes"],
+            "stats_persist_hits": m["stats_persist_hits"],
+            "stats_persist_writes": m["stats_persist_writes"],
             "persist_hits": m["persist_hits"],
             "persist_misses": m["persist_misses"],
             "persist_writes": m["persist_writes"],
@@ -663,6 +815,20 @@ def check_restart(rr: dict) -> list[str]:
     if warm["answers"] != cold["answers"]:
         fails.append("warm-started answers are not bitwise-identical to "
                      "the cold process")
+    if cold["stat_refreshes"] == 0 or cold["stats_persist_writes"] == 0:
+        fails.append("cold process computed no table statistics "
+                     f"(stat_refreshes={cold['stat_refreshes']}, "
+                     f"writes={cold['stats_persist_writes']}) — the "
+                     "calibration layer is not running")
+    if warm["stat_refreshes"] != 0:
+        fails.append(f"warm process recomputed {warm['stat_refreshes']} "
+                     "table statistics — the stats store is not "
+                     "warm-starting calibration")
+    if warm["stats_persist_hits"] == 0:
+        fails.append("warm process loaded zero persisted statistics")
+    if warm["decisions"] != cold["decisions"]:
+        fails.append("warm gating decisions differ from cold — persisted "
+                     "stats did not reproduce the planning trace")
     return fails
 
 
@@ -920,6 +1086,26 @@ def main(argv=None):
             f"queue_depth_peak={ma['queue_depth_peak']}")
     fused_fails += check_async(ra)
 
+    rz = run_misfusion(scale=scale, repeats=3 if tiny else 5,
+                       seed=args.seed)
+    zg, zu = rz["gated_metrics"], rz["ungated_metrics"]
+    print(f"mis-fusion gate   1 cheap lookup + {rz['queries'] - 1} "
+          f"overlapping 5-way dashboards × {rz['repeats']} rounds")
+    print(f"  gated lookup    {rz['gated_p95_s'] * 1e6:>10.1f} us p95 "
+          f"(cost_rejects={zg['fusion_cost_rejects']}, "
+          f"bigs fused={rz['bigs_fused_gated']})")
+    print(f"  ungated lookup  {rz['ungated_p95_s'] * 1e6:>10.1f} us p95 "
+          f"(disparity=inf: lookup fused={rz['lookup_fused_ungated']})")
+    print(f"  identical={rz['identical']} "
+          f"demotions={zg['fusion_demotions']} "
+          f"refused-after-demotion={not rz['bigs_fused_after_demotion']}")
+    rec.row("serving.misfusion.gated", rz["gated_p95_s"] * 1e6,
+            f"cost_rejects={zg['fusion_cost_rejects']};"
+            f"demotions={zg['fusion_demotions']}")
+    rec.row("serving.misfusion.ungated", rz["ungated_p95_s"] * 1e6,
+            f"disparity=inf;rejects={zu['fusion_cost_rejects']}")
+    fused_fails += check_misfusion(rz)
+
     rr = run_restart(scale=scale, seed=args.seed)
     cold, warm = rr["cold"], rr["warm"]
     print(f"restart warm start {rr['queries']} distinct queries, "
@@ -932,7 +1118,10 @@ def main(argv=None):
           f"(plan_builds={warm['plan_builds']}, "
           f"compile_s={warm['compile_s_total'] * 1e3:.1f} ms, "
           f"persist_hits={warm['persist_hits']})")
-    print(f"  identical={warm['answers'] == cold['answers']}")
+    print(f"  identical={warm['answers'] == cold['answers']} "
+          f"stat_refreshes cold={cold['stat_refreshes']} "
+          f"warm={warm['stat_refreshes']} "
+          f"decisions-identical={warm['decisions'] == cold['decisions']}")
     rec.row("serving.restart.cold", cold["wall_s"] * 1e6,
             f"plan_builds={cold['plan_builds']};"
             f"persist_writes={cold['persist_writes']}")

@@ -102,7 +102,11 @@ def serving_example():
     # their whole supplier⋈nation⋈region prefix, while the 5-way Fig. 1
     # query shares only the filtered region scan + the first two
     # semi-joins — and all four still land in one program that computes
-    # each shared sub-DAG exactly once ("partial fusion").
+    # each shared sub-DAG exactly once ("partial fusion").  disparity=inf
+    # turns the cost-admission gate off to show the raw machinery; the
+    # calibrated-planning section next demonstrates the default policy,
+    # which would band the expensive 5-way away from the cheap three.
+    svc_f = QueryService(db, schema, fusion_disparity=float("inf"))
     dims = """FROM supplier s, nation n, region r
         WHERE s.s_nationkey = n.n_nationkey
           AND n.n_regionkey = r.r_regionkey AND r.r_name IN (2, 3)"""
@@ -113,11 +117,11 @@ def serving_example():
         "GROUP BY s.s_nationkey",
         sql,                                 # the 5-way Fig. 1 query
     ]
-    fused = svc.submit_many(dashboard)
+    fused = svc_f.submit_many(dashboard)
     print(f"[serve] fused dashboard of {len(dashboard)}: "
           f"fused={[r.stats.fused for r in fused]} "
           f"group_size={fused[0].stats.fused_group_size}")
-    m = svc.metrics()
+    m = svc_f.metrics()
     print(f"[serve] metrics: compiles={m['compiles']} "
           f"(fused={m['fused_compiles']}) "
           f"plan hits/misses={m['plan_hits']}/{m['plan_misses']} "
@@ -135,6 +139,67 @@ def serving_example():
     for s in (dashboard[1], sql):
         plan = plan_query(canonicalize(parse_sql(s, schema)).query, schema)
         print(plan.describe())
+
+
+def calibrated_planning_example():
+    """Calibrated planning: statistics gate the rewrites and fusion.
+
+    Every rewrite pass is a *gated transform*: a structural gate decides
+    whether a rewrite COULD apply, cheap per-table statistics
+    (``repro.core.stats`` — row counts, per-column ranges/distincts,
+    MEASURED foreign-key orphan counts) decide whether it SHOULD, and
+    either way the pass records a machine-readable ``Decision`` — so a
+    plan always says which transforms fired and which gate values
+    justified them.  The same catalog prices candidate fusion groups at
+    serve time: a cheap lookup is never fused into a dashboard many
+    times its cost (it would inherit the dashboard's latency), and
+    observed serve times feed back so a fusion that *measures* slower
+    than solo serving is demoted on the next batch.  With
+    ``cache_dir=...`` the statistics persist beside the plans: a
+    restarted service recomputes nothing (``stat_refreshes == 0``) and
+    reaches bit-identical gating decisions.
+    """
+    from repro.core import StatsCatalog, parse_sql, plan_query
+    from repro.service import QueryService
+
+    db, schema = make_tpch_db(scale=500, seed=0)
+    stats = StatsCatalog(schema)
+    for name, table in db.items():
+        stats.refresh(name, table, db)
+
+    # nation⋉region is an FK→PK semi-join with zero measured orphans —
+    # an identity on live rows, so the calibrated pass eliminates it
+    q = parse_sql("SELECT COUNT(*) FROM nation n, region r "
+                  "WHERE n.n_regionkey = r.r_regionkey", schema)
+    plan = plan_query(q, schema, stats=stats)
+    print("\n[calibrate] planning decisions:")
+    for d in plan.decisions:
+        print(f"  {d.describe()}")
+
+    # the serving tier threads its own catalog through planning AND
+    # fusion admission: the cheap lookup below shares subplans with the
+    # 5-way dashboards, but costs ~100× less, so it serves solo
+    svc = QueryService(db, schema)
+    dims = """FROM supplier s, nation n, region r
+        WHERE s.s_nationkey = n.n_nationkey
+          AND n.n_regionkey = r.r_regionkey AND r.r_name IN (2, 3)"""
+    five = """FROM region r, nation n, supplier s, partsupp ps, part p
+        WHERE r.r_regionkey = n.n_regionkey
+          AND n.n_nationkey = s.s_nationkey
+          AND s.s_suppkey = ps.ps_suppkey
+          AND ps.ps_partkey = p.p_partkey
+          AND r.r_name IN (2, 3) AND p.p_price > 1200.0"""
+    lookup = f"SELECT COUNT(*) {dims}"
+    res = svc.submit_many([lookup,
+                           f"SELECT MIN(s.s_acctbal) {five}",
+                           f"SELECT SUM(s.s_acctbal) {five}"])
+    m = svc.metrics()
+    print(f"[calibrate] lookup fused={res[0].stats.fused} "
+          f"dashboards fused={res[1].stats.fused} "
+          f"(fusion_cost_rejects={m['fusion_cost_rejects']}, "
+          f"stat_refreshes={m['stat_refreshes']})")
+    fa = svc.explain(lookup)["fusion_admission"]
+    print(f"[calibrate] explain names the gate: {fa['reason']}")
 
 
 def async_serving_example():
@@ -445,6 +510,7 @@ if __name__ == "__main__":
     main()
     sql_example()
     serving_example()
+    calibrated_planning_example()
     async_serving_example()
     observability_example()
     warm_restart_example()

@@ -159,6 +159,37 @@ def _block_shape_discipline(paths: list[str]) -> int:
     return 1 if failures else 0
 
 
+def _stats_threshold_discipline(paths: list[str]) -> int:
+    """Forbid cardinality/selectivity policy constants outside
+    ``src/repro/core/stats.py``.  Cost-calibrated planning has ONE home
+    for its thresholds (``FK_ELIM_MAX_ORPHANS``,
+    ``PREFILTER_MAX_SELECTIVITY``, ``FUSION_COST_DISPARITY``, the
+    demotion/EWMA knobs, …): a second copy in a pass or the engine drifts
+    from the calibrated value and the decision traces stop telling the
+    truth about which gate was applied.  Callers import the constant or
+    accept a parameter defaulting to it.  Tests are exempt (they pin
+    thresholds on purpose to exercise the gates).  Always runs, even when
+    ruff/pyflakes handle the general lint."""
+    failures = 0
+    pat = re.compile(
+        r"^\s*[A-Z0-9_]*(SELECTIVITY|CARDINALITY|DISPARITY|ORPHANS?"
+        r"|DEMOTION|EWMA)[A-Z0-9_]*\s*(?::[^=]+)?=[^=]")
+    for f in _py_files(paths):
+        parts = f.parts
+        if "tests" in parts or f.name == "lint.py":
+            continue
+        if f.name == "stats.py" and "repro" in parts and "core" in parts:
+            continue
+        for ln, line in enumerate(f.read_text().splitlines(), start=1):
+            if pat.search(line.split("#")[0]):
+                print(f"{f}:{ln}: cardinality/selectivity threshold "
+                      "constant outside src/repro/core/stats.py — planner "
+                      "policy knobs live there; import the constant "
+                      "instead")
+                failures += 1
+    return 1 if failures else 0
+
+
 def _builtin_lint(paths: list[str]) -> int:
     print("lint: ruff/pyflakes not installed — built-in syntax + "
           "unused-import check")
@@ -188,12 +219,13 @@ def main(argv: list[str]) -> int:
     clock_rc = _clock_discipline(paths)
     shard_rc = _shard_map_discipline(paths)
     block_rc = _block_shape_discipline(paths)
+    stats_rc = _stats_threshold_discipline(paths)
     rc = _external(["ruff", "check"], paths)
     if rc is None:
         rc = _external(["pyflakes"], paths)
     if rc is None:
         rc = _builtin_lint(paths)
-    rc = rc or clock_rc or shard_rc or block_rc
+    rc = rc or clock_rc or shard_rc or block_rc or stats_rc
     print("lint: OK" if rc == 0 else "lint: FAIL")
     return rc
 

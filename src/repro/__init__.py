@@ -10,7 +10,6 @@ Layers:
   repro.kernels     — Pallas TPU kernels (+ XLA twins + jnp oracles)
   repro.models      — LM zoo for the 10 assigned architectures
   repro.training    — optimizer / microbatching / remat / losses
-  repro.serving     — prefill & decode with KV/SSM caches
   repro.service     — SQL serving tier: fingerprints, plan cache, QueryService
   repro.checkpoint  — sharded, elastic checkpointing
   repro.data        — synthetic relational + LM token pipelines

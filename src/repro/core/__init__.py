@@ -13,6 +13,7 @@ from repro.core.executor import (
 from repro.core.hypergraph import JoinTree, build_join_tree
 from repro.core.oma import Classification, classify
 from repro.core.plan import (
+    Decision,
     PhysicalPlan,
     PlanNode,
     PlanNotSerialisable,
@@ -24,14 +25,20 @@ from repro.core.plan import (
     segment_plan,
 )
 from repro.core.query import Agg, AggQuery, Atom, selection_from_spec
-from repro.core.rewrite import plan_query
+from repro.core.rewrite import PlanningError, plan_query
 from repro.core.sql import parse_sql, SqlError
+from repro.core.stats import StatsCatalog, TableStats, compute_table_stats
 
 __all__ = [
     "Agg",
     "AggQuery",
     "Atom",
     "Classification",
+    "Decision",
+    "PlanningError",
+    "StatsCatalog",
+    "TableStats",
+    "compute_table_stats",
     "classify",
     "build_join_tree",
     "JoinTree",

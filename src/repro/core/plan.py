@@ -183,16 +183,63 @@ def _short_key(node: PlanNode) -> str:
     return "-" if k is None else _digest(k)[:10]
 
 
+@dataclasses.dataclass(frozen=True)
+class Decision:
+    """One gated planner decision: which pass, on what, applied or skipped,
+    why, and the stat values the gate read.
+
+    ``depends`` maps relation → data-version token (``Table.content_token``)
+    for every table whose statistics the gate consulted: a consumer (the
+    serving tier's plan cache) declares a persisted decision *stale* —
+    and replans — exactly when one of those tokens no longer matches the
+    live catalog.  Purely JSON-able so the trace survives the plan store."""
+
+    pass_name: str
+    target: str               # alias / edge / "" for whole-plan decisions
+    applied: bool
+    reason: str
+    stats: tuple = ()         # sorted (name, value) pairs the gate read
+    depends: tuple = ()       # sorted (relation, token) pairs
+
+    def to_payload(self) -> dict:
+        return {"pass": self.pass_name, "target": self.target,
+                "applied": self.applied, "reason": self.reason,
+                "stats": [list(kv) for kv in self.stats],
+                "depends": [list(kv) for kv in self.depends]}
+
+    @classmethod
+    def from_payload(cls, p: dict) -> "Decision":
+        return cls(pass_name=p["pass"], target=p["target"],
+                   applied=bool(p["applied"]), reason=p["reason"],
+                   stats=tuple(tuple(kv) for kv in p["stats"]),
+                   depends=tuple(tuple(kv) for kv in p["depends"]))
+
+    def describe(self) -> str:
+        verdict = "applied" if self.applied else "skipped"
+        vals = " ".join(f"{k}={v}" for k, v in self.stats)
+        tgt = f" @{self.target}" if self.target else ""
+        line = f"{self.pass_name}{tgt}: {verdict} — {self.reason}"
+        return f"{line} [{vals}]" if vals else line
+
+
 @dataclasses.dataclass(frozen=True, eq=False)
 class PhysicalPlan:
     """A rooted op DAG.  ``root`` is the FinalAgg node; ``tree`` and
     ``var_cols`` carry the query context the executor needs to resolve
-    variables to schema columns and key domains."""
+    variables to schema columns and key domains.
+
+    ``decisions`` is the planner's machine-readable decision trace (one
+    :class:`Decision` per gated transform considered).  It is deliberately
+    EXCLUDED from ``cache_key``: a decision only matters to plan identity
+    when it changed the emitted graph, and then the op DAG itself already
+    differs — two structurally identical plans are interchangeable no
+    matter what the planner pondered on the way."""
 
     mode: str
     root: PlanNode
     tree: JoinTree
     var_cols: dict[str, dict[str, str]]  # alias → {var → schema column}
+    decisions: tuple = ()                # tuple[Decision, ...]
 
     @property
     def nodes(self) -> tuple[PlanNode, ...]:
@@ -478,6 +525,7 @@ def plan_to_payload(plan: "PhysicalPlan") -> dict:
                       for alias, a in tree.atoms.items()},
         },
         "var_cols": {alias: dict(m) for alias, m in plan.var_cols.items()},
+        "decisions": [d.to_payload() for d in plan.decisions],
     }
 
 
@@ -524,5 +572,7 @@ def plan_from_payload(payload: dict) -> "PhysicalPlan":
                                              atoms.get(e["root"])))
         else:
             raise ValueError(f"unknown node kind {kind!r}")
+    decisions = tuple(Decision.from_payload(d)
+                      for d in payload.get("decisions", ()))
     return PhysicalPlan(payload["mode"], nodes[payload["root"]], tree,
-                        var_cols)
+                        var_cols, decisions=decisions)

@@ -15,7 +15,7 @@ import numpy as np
 
 from repro.configs import ARCHS, get_config, get_smoke_config
 from repro.models import init_params
-from repro.serving import ServeEngine
+from repro.models.lm_serving import ServeEngine
 
 
 def main():

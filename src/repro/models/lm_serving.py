@@ -1,4 +1,10 @@
-"""Batched serving: prefill + jitted decode loop with slot management.
+"""LM batched serving: prefill + jitted decode loop with slot management.
+
+Lives beside the model code it drives (everything here is a thin loop over
+``repro.models``' prefill/decode_step).  Historically this was the
+``repro.serving`` package — a name that now collides conceptually with
+``repro.service``, the guarded-aggregate *query* serving tier; the old
+import path remains as a deprecated re-export.
 
 `ServeEngine` owns the per-slot KV/SSM caches for a fixed batch of request
 slots (static shapes).  Requests of different lengths right-pad into slots;

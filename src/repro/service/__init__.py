@@ -6,8 +6,9 @@ program runs": query fingerprinting (``fingerprint``), the multi-level
 plan cache (``plan_cache``), the persistent cross-process plan store
 (``plan_store``), the concurrent micro-batching engine (``engine``), the
 async cross-caller batch former (``scheduler``), the persistent
-tuned-kernel-config store (``tune_store``), and the tracing + metrics
-registry every request reports into (``observability``).
+tuned-kernel-config store (``tune_store``), the persistent statistics
+store behind cost-calibrated planning (``stats_store``), and the tracing
++ metrics registry every request reports into (``observability``).
 """
 
 from repro.service.engine import (
@@ -35,6 +36,7 @@ from repro.service.plan_store import (
     store_fingerprint,
 )
 from repro.service.scheduler import AsyncScheduler
+from repro.service.stats_store import StatsStore
 from repro.service.tune_store import TuneStore
 
 __all__ = [
@@ -54,6 +56,7 @@ __all__ = [
     "QueryResult",
     "QueryService",
     "ServeStats",
+    "StatsStore",
     "TuneStore",
     "schema_fingerprint",
     "store_fingerprint",

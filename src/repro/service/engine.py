@@ -146,6 +146,7 @@ from repro.core.executor import (
 from repro.core.plan import MaterializeJoinOp, PhysicalPlan, segment_plan
 from repro.core.rewrite import plan_query
 from repro.core.sql import parse_sql
+from repro.core.stats import FUSION_COST_DISPARITY, StatsCatalog
 from repro.service.fingerprint import CanonicalQuery, canonicalize
 from repro.service.observability import NULL_SPAN, Observability, TraceSpan
 from repro.service.plan_cache import LRUCache, PlanCache, ShapeBucket
@@ -153,8 +154,10 @@ from repro.kernels.autotune import KernelTuner
 from repro.service.plan_store import (
     PlanStore,
     enable_executable_cache,
+    schema_fingerprint,
     store_fingerprint,
 )
+from repro.service.stats_store import STATS_PERSIST_ZEROS, StatsStore
 from repro.service.tune_store import TUNE_PERSIST_ZEROS, TuneStore
 from repro.tables.table import Schema, Table, bucket_capacity
 
@@ -231,6 +234,8 @@ class _Unit:
     sig: str                          # member signature for the fused cache
     plan_source: str = "memory"       # memory | disk | built
     results: dict = dataclasses.field(default_factory=dict)
+    served_sig: str = ""              # fusion-group signature it ran under
+                                      # ("" = served solo) — the feedback key
 
     @property
     def canon(self) -> CanonicalQuery:
@@ -253,12 +258,20 @@ class QueryService:
                  profile_annotations: bool = False,
                  mesh: "jax.sharding.Mesh | None" = None,
                  data_axes: tuple[str, ...] | None = None,
-                 mesh_presort: bool = False):
+                 mesh_presort: bool = False,
+                 fusion_disparity: float | None = None):
         self._db = dict(db)
         self.schema = schema
         self.mode = mode
         self.use_fkpk = use_fkpk
         self.min_bucket = min_bucket
+        # fusion-admission cost gate: a plan never joins a fusion group
+        # whose max estimated cost is >= this multiple of its own.  None →
+        # the calibrated default from core.stats; float("inf") disables
+        # the gate (the ungated baseline benchmarks compare against).
+        self.fusion_disparity = (FUSION_COST_DISPARITY
+                                 if fusion_disparity is None
+                                 else float(fusion_disparity))
         # mesh serving: same pipeline, distributed jit executor (below),
         # topology-aware cache keys, per-shard buckets, sharded views.
         # min_bucket is PER SHARD on a mesh.
@@ -287,6 +300,13 @@ class QueryService:
             "compile_s_total",        # float: total seconds compiling
             # async tier (bumped by the scheduler once it starts)
             "async_requests", "async_batches", "rejected",
+            # cost-calibrated planning
+            "stat_refreshes",         # full per-table stats computes ran
+                                      # (0 in a fully warm-started process)
+            "fusion_cost_rejects",    # members kept out of a fusion group
+                                      # by the cost-disparity gate
+            "fusion_demotions",       # members kept out by serve-time
+                                      # feedback (a regressed fusion)
         ])
         self.obs.set_gauge("queue_depth", 0)
         self.obs.register_peak_gauge("queue_depth_peak", "queue_depth")
@@ -343,6 +363,31 @@ class QueryService:
                                  interpret=interpret)
         self.tuner.load_persisted()
         self._jit_executor.tuning = self.tuner.table
+        # cost-calibrated planning: one statistics catalog feeds the gated
+        # rewrite passes, the fusion-admission cost gate, and the serve-time
+        # feedback loop.  Stats are derived state, so they persist under the
+        # same cache_dir discipline as plans/tunings — scoped by SCHEMA only
+        # (statistics describe the data, not the planner configuration, so
+        # every mode/use_fkpk/topology variant shares them).  A warm restart
+        # over identical data loads every table from disk and reports
+        # ``stat_refreshes == 0``.
+        self.stats = StatsCatalog(schema)
+        self.stats_store = (StatsStore(cache_dir, schema_fingerprint(schema))
+                            if cache_dir is not None else None)
+        # live content tokens per relation — refreshed on update_table; the
+        # store key composites each table's token with its FK destinations'
+        # (orphan counts read both sides of a declared FK)
+        self._tokens: dict[str, str] = {
+            name: t.content_token() for name, t in self._db.items()}
+        for name in sorted(self._db):
+            self._refresh_stats(name)
+        if self.stats_store is not None:
+            fb = self.stats_store.load_feedback()
+            if fb is not None:
+                self.stats.load_feedback(fb)
+        # fingerprint → last fusion-admission decision payload, for
+        # ``explain`` (bounded like _segments below)
+        self._fusion_decisions: dict[str, dict] = {}
         # fingerprint → (eager, prefix_key, subplans, sig): the fusion
         # identity is a pure function of the canonical structure, so
         # memoise it across batches (bounded: cleared when it outgrows the
@@ -396,6 +441,63 @@ class QueryService:
             if old_bucket != new_bucket:
                 n = self.cache.invalidate_relation(name)
                 self.obs.inc("bucket_invalidations", n)
+        # statistics follow the data: refresh this table, plus every table
+        # whose FK points AT it (their orphan counts read the new data).
+        # Outside the lock — stats computes touch device arrays and the
+        # catalog has its own synchronisation.
+        self._tokens[name] = table.content_token()
+        self._refresh_stats(name)
+        for fk in self.schema.foreign_keys:
+            if fk.dst == name and fk.src in self._db:
+                self._refresh_stats(fk.src)
+        # cached plans whose gating decisions consulted now-changed
+        # statistics must re-plan: the same fingerprint may deserve a
+        # different graph under the new data distribution
+        with self._lock:
+            self.cache.plans.invalidate_items(
+                lambda fp, plan: not self._decisions_valid(plan))
+
+    # ---- statistics ------------------------------------------------------
+    def _stats_store_token(self, name: str) -> str:
+        """Composite content token keying ``name``'s persisted stats: its
+        own data version plus its FK destinations' (orphan counts depend on
+        both sides).  Any change to either side forces a fresh compute."""
+        parts = [self._tokens[name]]
+        for fk in sorted(self.schema.foreign_keys,
+                         key=lambda f: (f.src, f.src_col)):
+            if fk.src == name and fk.dst in self._tokens:
+                parts.append(self._tokens[fk.dst])
+        if len(parts) == 1:
+            return parts[0]
+        return hashlib.sha256("\n".join(parts).encode()).hexdigest()
+
+    def _refresh_stats(self, name: str) -> None:
+        """Bring ``name``'s catalog entry up to date: persisted stats at
+        the current composite token install without recomputation; a miss
+        computes fresh (counted ``stat_refreshes``) and writes back."""
+        token = self._stats_store_token(name)
+        if self.stats_store is not None:
+            stats = self.stats_store.load(name, token)
+            if stats is not None:
+                self.stats.install(stats)
+                return
+        stats = self.stats.refresh(name, self._db[name], self._db)
+        self.obs.inc("stat_refreshes")
+        if self.stats_store is not None:
+            # keyed by the composite token (the staleness discipline); the
+            # payload keeps the table's OWN token, so a warm install puts
+            # exactly what a cold compute would into the catalog
+            self.stats_store.save(stats, token=token)
+
+    def _decisions_valid(self, plan: PhysicalPlan) -> bool:
+        """True iff every statistic a plan's gating decisions consulted
+        still matches the live catalog.  Plans that consulted nothing
+        (``stats=None`` planning, or no stats-gated pass fired) are always
+        valid — their graph is stats-independent."""
+        depends: dict[str, str] = {}
+        for d in getattr(plan, "decisions", ()):
+            depends.update(dict(d.depends))
+        return not depends or self.stats.validate_depends(depends)
 
     def _bucket_cap(self, n_rows: int) -> int:
         """The shape bucket an n-row table pads to: power-of-two locally,
@@ -713,7 +815,21 @@ class QueryService:
                 # serving each member singly, so only the member(s) that
                 # actually cannot serve carry an error
                 for u in us:
+                    u.served_sig = ""       # it is a solo serve after all
                     self._try_serve(self._serve_single, u)
+
+        # close the loop: observed serve times feed the catalog per
+        # (fingerprint, fusion-group signature) — "" is the solo baseline —
+        # so the grouper demotes fusions that keep regressing a member.
+        # One atomic feedback write-back per observing batch.
+        observed = False
+        for u in units:
+            if u.results and all(r.error is None for r in u.group):
+                self.stats.observe_serve(u.canon.fingerprint, u.served_sig,
+                                         u.group[0].stats.run_s)
+                observed = True
+        if observed and self.stats_store is not None:
+            self.stats_store.save_feedback(self.stats.feedback_payload())
 
         results: dict[int, QueryResult] = {}
         for group in groups.values():
@@ -787,10 +903,14 @@ class QueryService:
             if canon.shareable:
                 plan = self.cache.load_persistent(canon.fingerprint)
                 if plan is not None:
-                    source = "disk"
-                    return plan
+                    # a persisted plan is only trusted if the statistics
+                    # its gating decisions consulted still describe the
+                    # live data; otherwise re-plan under current stats
+                    if self._decisions_valid(plan):
+                        source = "disk"
+                        return plan
             plan = plan_query(canon.query, self.schema, mode=self.mode,
-                              use_fkpk=self.use_fkpk)
+                              use_fkpk=self.use_fkpk, stats=self.stats)
             source = "built"
             self.obs.inc("plan_builds")
             if canon.shareable:
@@ -860,9 +980,108 @@ class QueryService:
         for comp in comps.values():
             if len(comp) == 1:
                 singles.append(comp[0])
-            else:
-                fused_groups.append(comp)
+                continue
+            groups, solos = self._admit_fusion(comp)
+            singles.extend(solos)
+            fused_groups.extend(groups)
         return eagers, singles, fused_groups
+
+    def _admit_fusion(self, comp: list[_Unit]
+                      ) -> tuple[list[list[_Unit]], list[_Unit]]:
+        """Admission gate for one candidate fusion group: subplan sharing
+        makes a fusion *possible*, the cost model and serve-time feedback
+        decide whether it is *worth it*.  Returns (fused groups, solos).
+
+        Two gates, in order:
+
+        1. cost disparity — members partition into cost-compatible BANDS:
+           walking members by ascending estimated (padded-shape) cost, a
+           member opens a new band when it costs ≥ ``fusion_disparity`` ×
+           the current band's minimum.  A cheap lookup fused with a heavy
+           dashboard inherits the dashboard's latency for no savings it
+           can notice — but cost-similar members still fuse among
+           themselves, so the gate never forfeits compatible sharing.
+           Members stranded in a singleton band serve solo and count
+           ``fusion_cost_rejects``.
+        2. feedback demotion — a (fingerprint, group-signature) pair the
+           catalog has observed regressing vs. the member's solo baseline
+           is evicted from its band; the signature shrinks and the check
+           repeats until the band is stable (``fusion_demotions``).
+        """
+        rels = sorted({rel for u in comp for rel in u.plan.scanned_rels()})
+        with self._lock:
+            rows = {rel: self._bucket_cap(self._db[rel].capacity)
+                    for rel in rels if rel in self._db}
+        costs = {id(u): self.stats.estimate_plan_cost(u.plan, rows=rows)
+                 for u in comp}
+        cmin = min(costs.values())
+        cmax = max(costs.values())
+        bands: list[list[_Unit]] = []
+        for u in sorted(comp, key=lambda u: costs[id(u)]):
+            if bands and costs[id(u)] < self.fusion_disparity * max(
+                    costs[id(bands[-1][0])], 1.0):
+                bands[-1].append(u)
+            else:
+                bands.append([u])
+        groups: list[list[_Unit]] = []
+        solos: list[_Unit] = []
+        for band in bands:
+            if len(band) == 1:
+                u = band[0]
+                c = costs[id(u)]
+                solos.append(u)
+                self.obs.inc("fusion_cost_rejects")
+                self._note_fusion(
+                    u, admitted=False, cost=c, group_max_cost=cmax,
+                    reason=(f"cost disparity >= {self.fusion_disparity:g}x:"
+                            f" member cost {c:.0f} incompatible with the "
+                            f"rest of its component (costs {cmin:.0f}.."
+                            f"{cmax:.0f})"))
+                continue
+            keep = band
+            while len(keep) > 1:
+                keep.sort(key=lambda u: u.canon.fingerprint)
+                sig = hashlib.sha256(
+                    repr(tuple(u.sig for u in keep)).encode()).hexdigest()
+                demoted = [u for u in keep
+                           if self.stats.is_demoted(u.canon.fingerprint,
+                                                    sig)]
+                if not demoted:
+                    for u in keep:
+                        self._note_fusion(
+                            u, admitted=True, cost=costs[id(u)],
+                            group_max_cost=cmax, signature=sig,
+                            reason=f"admitted (group of {len(keep)})")
+                    break
+                for u in demoted:
+                    keep.remove(u)
+                    solos.append(u)
+                    self.obs.inc("fusion_demotions")
+                    self._note_fusion(
+                        u, admitted=False, cost=costs[id(u)],
+                        group_max_cost=cmax, signature=sig,
+                        reason=("demoted by serve-time feedback: fused "
+                                "EWMA regressed vs solo baseline"))
+            if len(keep) > 1:
+                groups.append(keep)
+            else:
+                solos.extend(keep)
+        return groups, solos
+
+    def _note_fusion(self, u: _Unit, *, admitted: bool, reason: str,
+                     cost: float, group_max_cost: float,
+                     signature: str = "") -> None:
+        """Record the last fusion-admission decision per fingerprint for
+        ``explain`` (bounded like ``_segments``)."""
+        with self._lock:
+            if len(self._fusion_decisions) > 4 * self.cache.plans.capacity:
+                self._fusion_decisions.clear()
+            self._fusion_decisions[u.canon.fingerprint] = {
+                "admitted": admitted, "reason": reason, "cost": cost,
+                "group_max_cost": group_max_cost,
+                "disparity": self.fusion_disparity,
+                "signature": signature,
+            }
 
     # ---- execution -------------------------------------------------------
     _MISSING = object()
@@ -973,6 +1192,10 @@ class QueryService:
             bucket, sub_db = self._snapshot(rels)
         signature = hashlib.sha256(
             repr(tuple(u.sig for u in units)).encode()).hexdigest()
+        for u in units:
+            # the feedback key this serve will be observed under — matches
+            # the signature _admit_fusion computes for the same member set
+            u.served_sig = signature
         compile_s = 0.0
 
         def build():
@@ -1084,6 +1307,10 @@ class QueryService:
         snap["counters"].update(
             self.tuner.store.metrics() if self.tuner.store is not None
             else dict(TUNE_PERSIST_ZEROS))
+        snap["counters"].update(
+            self.stats_store.metrics() if self.stats_store is not None
+            else dict(STATS_PERSIST_ZEROS))
+        snap["gauges"]["stats_feedback_records"] = self.stats.feedback_len()
         return snap
 
     def metrics(self) -> dict[str, Any]:
@@ -1115,6 +1342,9 @@ class QueryService:
         with self._lock:
             levels = self.cache.describe(fp, st.bucket, signature=sig,
                                          topo=self._topo)
+            plan = self.cache.plans.peek(fp)
+            fusion_admission = self._fusion_decisions.get(fp)
+        decisions = list(plan.decisions) if plan is not None else []
         if self._mesh is not None:
             axes, counts = self._topo
             sharding = {
@@ -1145,6 +1375,13 @@ class QueryService:
             "bucket": st.bucket,
             "topology": self._topo,
             "sharding": sharding,
+            # the machine-readable planning trace: every gated rewrite
+            # pass's applied/skipped verdict with the gate values and the
+            # statistics tokens it consulted
+            "decisions": [d.to_payload() for d in decisions],
+            # the last fusion-admission verdict for this fingerprint (None
+            # until it has been a fusion candidate)
+            "fusion_admission": fusion_admission,
             "timings_s": {"parse": st.parse_s, "queue": st.queue_s,
                           "plan": st.plan_s, "compile": st.compile_s,
                           "run": st.run_s, "total": st.total_s},
@@ -1160,7 +1397,16 @@ class QueryService:
                  + (f" (group of {st.fused_group_size})" if st.fused
                     else ""),
                  f"  graph_key: {sig[:32]}",
-                 f"  shared subplans: {len(subplans)}",
+                 f"  shared subplans: {len(subplans)}",]
+        if decisions:
+            lines.append("  planning decisions:")
+            lines.extend(f"    {d.describe()}" for d in decisions)
+        if fusion_admission is not None:
+            fa = fusion_admission
+            lines.append("  fusion admission: "
+                         + ("admitted" if fa["admitted"] else "rejected")
+                         + f" — {fa['reason']}")
+        lines += [
                  "  sharding: " + (
                      f"rows over {'×'.join(sharding['data_axes'])} "
                      f"({sharding['devices']} shards)"

@@ -112,6 +112,16 @@ class LRUCache:
             del self._d[k]
         return len(doomed)
 
+    def invalidate_items(self,
+                         pred: Callable[[Hashable, Any], bool]) -> int:
+        """Like ``invalidate_if`` but the predicate sees the VALUE too —
+        for invalidations keyed on entry content (e.g. a cached plan whose
+        decision trace consulted statistics that have since changed)."""
+        doomed = [k for k, v in self._d.items() if pred(k, v)]
+        for k in doomed:
+            del self._d[k]
+        return len(doomed)
+
     def counters(self) -> dict[str, int]:
         return {"size": len(self._d), "capacity": self.capacity,
                 "hits": self.hits, "misses": self.misses,

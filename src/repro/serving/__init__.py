@@ -1,3 +1,18 @@
-from repro.serving.engine import ServeEngine, greedy_generate
+"""Deprecated alias for :mod:`repro.models.lm_serving`.
+
+The LM serving loop moved next to the model code it drives; this package
+name is kept only so existing imports keep working, and will be removed.
+It is unrelated to :mod:`repro.service`, the guarded-aggregate query
+serving tier.
+"""
+
+import warnings
+
+from repro.models.lm_serving import ServeEngine, greedy_generate
+
+warnings.warn(
+    "repro.serving is deprecated; import from repro.models.lm_serving "
+    "instead (repro.service is the query serving tier)",
+    DeprecationWarning, stacklevel=2)
 
 __all__ = ["ServeEngine", "greedy_generate"]

@@ -145,6 +145,26 @@ class Table:
         """Sum of frequencies = bag cardinality this table represents."""
         return jnp.sum(self.freq)
 
+    def content_token(self) -> str:
+        """Cheap content hash of the table's data version: one sha256 over
+        every column's bytes plus the frequency column.  The statistics
+        layer keys per-table stats on this token, so a warm restart over
+        identical data recognises its persisted stats without recomputing
+        them, and any data change (new rows, zeroed frequencies, padding)
+        invalidates every decision calibrated against the old version."""
+        import hashlib
+        h = hashlib.sha256()
+        for name in self.column_names:
+            arr = np.asarray(self.columns[name])
+            h.update(name.encode())
+            h.update(str(arr.dtype).encode())
+            h.update(arr.tobytes())
+        f = np.asarray(self.freq)
+        h.update(b"__freq__")
+        h.update(str(f.dtype).encode())
+        h.update(f.tobytes())
+        return h.hexdigest()
+
     # ---- relational primitives (frequency-aware) -----------------------
     def select(self, pred: Callable[[dict[str, jax.Array]], jax.Array]) -> "Table":
         """σ: zero out frequencies of rows failing `pred` (no compaction)."""

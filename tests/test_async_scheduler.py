@@ -121,7 +121,11 @@ def test_async_cross_caller_batch_formation():
         distinct = len(set(work))
         assert m["fused_compiles"] < distinct
         assert m["compiles"] < threads_n
-        assert m["fused_queries"] >= distinct  # cross-caller fusion happened
+        # cross-caller fusion happened — all but FIG1, whose heavy
+        # 5-relation plan the fusion cost gate bands away from the cheap
+        # supplier-dims family (it serves solo by design)
+        assert m["fused_queries"] >= distinct - 1
+        assert m["fusion_cost_rejects"] >= 1
     finally:
         svc.close()
 

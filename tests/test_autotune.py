@@ -370,6 +370,23 @@ def test_report_compare_flags_regressions(tmp_path):
     assert report.compare(str(tmp_path / "junk.json"), str(new)) == 2
 
 
+def test_report_compare_names_added_and_removed_rows(tmp_path, capsys):
+    """Coverage drift is reported explicitly: dropped scenarios under a
+    'removed rows' header, new ones under 'added rows'."""
+    report = _load_module("bench_report", "benchmarks/report.py")
+    old = tmp_path / "old.json"
+    new = tmp_path / "new.json"
+    old.write_text(json.dumps(_bench_doc([("a", 100.0), ("gone", 1.0)])))
+    new.write_text(json.dumps(_bench_doc([("a", 100.0), ("fresh", 2.0)])))
+    report.compare(str(old), str(new))
+    out = capsys.readouterr().out
+    assert "removed rows (1" in out and "- s/gone" in out
+    assert "added rows (1" in out and "+ s/fresh" in out
+    report.compare(str(old), str(old))
+    out = capsys.readouterr().out
+    assert "row coverage unchanged" in out
+
+
 def test_lint_block_shape_discipline(tmp_path):
     lint = _load_module("repro_lint", "scripts/lint.py")
     bad = tmp_path / "src" / "repro" / "service"

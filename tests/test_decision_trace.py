@@ -1,0 +1,270 @@
+"""Cost-calibrated planning: decision traces, typed planning errors, and
+the fusion-admission gate's explain surface.
+
+Every rewrite pass is a *gated transform* — structural gate, stats
+calibration, apply-or-skip — and records a machine-readable
+:class:`~repro.core.Decision` either way.  These tests pin that contract:
+the trace names every pass, applied decisions carry the gate values and
+the statistics tokens they consulted, skips say why, the trace survives
+the plan-store round-trip byte-for-byte, and serving-tier rejections
+(fusion admission) name the cost disparity that caused them.
+"""
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import (
+    Agg,
+    AggQuery,
+    Atom,
+    Decision,
+    Executor,
+    PlanningError,
+    StatsCatalog,
+    plan_query,
+)
+from repro.core.plan import SemiJoinOp, plan_from_payload, plan_to_payload
+from repro.core.sql import parse_sql
+from repro.data import make_graph_db, make_tpch_db
+from repro.service import QueryService
+from repro.tables.table import Table
+
+jax.config.update("jax_platform_name", "cpu")
+
+NATION_REGION = ("SELECT COUNT(*) FROM nation n, region r "
+                 "WHERE n.n_regionkey = r.r_regionkey")
+_SUPP_DIMS = """FROM supplier s, nation n, region r
+WHERE s.s_nationkey = n.n_nationkey AND n.n_regionkey = r.r_regionkey
+  AND r.r_name IN (2, 3)"""
+_FIVE_WAY = """FROM region r, nation n, supplier s, partsupp ps, part p
+WHERE r.r_regionkey = n.n_regionkey AND n.n_nationkey = s.s_nationkey
+  AND s.s_suppkey = ps.ps_suppkey AND ps.ps_partkey = p.p_partkey
+  AND r.r_name IN (2, 3) AND p.p_price > 1200.0"""
+
+
+@pytest.fixture(scope="module")
+def tpch():
+    return make_tpch_db(scale=100, seed=1)
+
+
+def _catalog(db, schema) -> StatsCatalog:
+    cat = StatsCatalog(schema)
+    for name, table in db.items():
+        cat.refresh(name, table, db)
+    return cat
+
+
+# ---------------------------------------------------------------------------
+# the rewrite pipeline's trace
+# ---------------------------------------------------------------------------
+def test_every_pass_reports_a_decision(tpch):
+    db, schema = tpch
+    q = parse_sql(NATION_REGION, schema)
+    plan = plan_query(q, schema, stats=_catalog(db, schema))
+    assert all(isinstance(d, Decision) for d in plan.decisions)
+    names = {d.pass_name for d in plan.decisions}
+    assert {"classify", "reroot_guard", "lower", "fkpk_degrade",
+            "fk_join_eliminate", "prefilter_pushdown"} <= names
+    # every decision renders: applied/skipped plus a reason
+    for d in plan.decisions:
+        text = d.describe()
+        assert ("applied" in text) or ("skipped" in text)
+        assert d.reason
+
+
+def test_fk_elimination_applied_with_gate_values_and_depends(tpch):
+    db, schema = tpch
+    cat = _catalog(db, schema)
+    q = parse_sql(NATION_REGION, schema)
+    gated = plan_query(q, schema, stats=cat)
+    d = next(d for d in gated.decisions
+             if d.pass_name == "fk_join_eliminate" and d.applied)
+    gate = dict(d.stats)
+    assert gate["orphans"] == 0 and gate["max_orphans"] == 0
+    deps = dict(d.depends)
+    assert set(deps) == {"nation", "region"}
+    assert deps["nation"] == db["nation"].content_token()
+    assert deps["region"] == db["region"].content_token()
+
+    # the decision changed the emitted graph: the semi-join is gone …
+    plain = plan_query(q, schema)
+    assert len(gated.ops) < len(plain.ops)
+    assert not any(isinstance(op, SemiJoinOp) for op in gated.ops)
+    # … while stats=None records the skip and leaves the plan as before
+    skip = next(d for d in plain.decisions
+                if d.pass_name == "fk_join_eliminate")
+    assert not skip.applied and "no stats" in skip.reason
+    # answers are identical either way
+    ex = Executor(db, schema)
+    assert float(ex.execute(gated)["count(*)"]) \
+        == float(ex.execute(plain)["count(*)"])
+
+
+def test_fk_elimination_skipped_on_measured_orphans(tpch):
+    db, schema = tpch
+    region = db["region"]
+    keep = np.asarray(region.columns["r_regionkey"]) != 0
+    db2 = {**db, "region": Table.from_numpy(
+        {k: np.asarray(v)[keep] for k, v in region.columns.items()})}
+    q = parse_sql(NATION_REGION, schema)
+    plan = plan_query(q, schema, stats=_catalog(db2, schema))
+    d = next(d for d in plan.decisions
+             if d.pass_name == "fk_join_eliminate")
+    assert not d.applied
+    assert dict(d.stats)["orphans"] > 0
+    assert any(isinstance(op, SemiJoinOp) for op in plan.ops)
+    # the declared FK alone never justifies elimination — integrity is
+    # measured per data version, and here it does not hold
+    ex = Executor(db2, schema)
+    want = int(np.asarray(keep, np.int64).size)  # sanity: query still runs
+    assert float(ex.execute(plan)["count(*)"]) <= want * 25
+
+
+def test_prefilter_pushdown_gated_on_selectivity(tpch):
+    db, schema = tpch
+    cat = _catalog(db, schema)
+    price = cat.get("part").columns["p_price"]
+
+    def sql(threshold):
+        return (f"SELECT COUNT(*) FROM partsupp ps, part p "
+                f"WHERE ps.ps_partkey = p.p_partkey "
+                f"AND p.p_price > {threshold}")
+
+    selective = price.lo + 0.9 * (price.hi - price.lo)   # est. sel ≈ 0.1
+    q = parse_sql(sql(selective), schema)
+    plan = plan_query(q, schema, mode="ref", stats=cat)
+    d = next(d for d in plan.decisions
+             if d.pass_name == "prefilter_pushdown" and d.applied)
+    gate = dict(d.stats)
+    assert gate["selectivity"] <= gate["max_selectivity"]
+    assert gate["parent_rows"] >= gate["min_parent_rows"]
+    assert any(isinstance(op, SemiJoinOp) for op in plan.ops)
+    # answer-preserving vs. the unfiltered ref baseline
+    ex = Executor(db, schema)
+    base = plan_query(q, schema, mode="ref")
+    assert not any(isinstance(op, SemiJoinOp) for op in base.ops)
+    np.testing.assert_array_equal(
+        np.asarray(ex.execute(plan)["count(*)"]),
+        np.asarray(ex.execute(base)["count(*)"]))
+
+    # an unselective filter fails the calibration and is skipped
+    broad = price.lo + 0.2 * (price.hi - price.lo)
+    q2 = parse_sql(sql(broad), schema)
+    plan2 = plan_query(q2, schema, mode="ref", stats=cat)
+    d2 = next(d for d in plan2.decisions
+              if d.pass_name == "prefilter_pushdown")
+    assert not d2.applied
+    assert dict(d2.stats)["selectivity"] > dict(d2.stats)["max_selectivity"]
+
+
+def test_decision_trace_survives_plan_payload_roundtrip(tpch):
+    db, schema = tpch
+    q = parse_sql(NATION_REGION, schema)
+    plan = plan_query(q, schema, stats=_catalog(db, schema))
+    assert plan.decisions
+    rt = plan_from_payload(plan_to_payload(plan))
+    assert rt.decisions == plan.decisions
+    assert [d.to_payload() for d in rt.decisions] \
+        == [d.to_payload() for d in plan.decisions]
+    # decisions ride OUTSIDE the identity: same graph, same cache key
+    assert rt.cache_key() == plan.cache_key()
+
+
+# ---------------------------------------------------------------------------
+# typed planning errors
+# ---------------------------------------------------------------------------
+_CYCLIC = AggQuery(
+    atoms=(Atom("edge", "e1", ("a", "b")),
+           Atom("edge", "e2", ("b", "c")),
+           Atom("edge", "e3", ("c", "a"))),
+    aggregates=(Agg("count"),))
+_PATH = AggQuery(
+    atoms=(Atom("edge", "e1", ("a", "b")),
+           Atom("edge", "e2", ("b", "c"))),
+    aggregates=(Agg("count"),))
+
+
+def test_cyclic_query_raises_typed_planning_error():
+    _, schema = make_graph_db(20, 30, seed=1)
+    assert issubclass(PlanningError, ValueError)   # old handlers still work
+    with pytest.raises(PlanningError, match="cyclic"):
+        plan_query(_CYCLIC, schema)
+
+
+def test_cyclic_batchmate_is_isolated_per_request():
+    db, schema = make_graph_db(20, 30, seed=1)
+    svc = QueryService(db, schema)
+    good, bad = svc.submit_many([_PATH, _CYCLIC])
+    assert good.ok and good.error is None
+    assert not bad.ok
+    assert isinstance(bad.error, PlanningError)
+    assert "cyclic" in str(bad.error)
+    # the single-request path re-raises the same typed error
+    with pytest.raises(PlanningError, match="cyclic"):
+        svc.submit(_CYCLIC)
+
+
+# ---------------------------------------------------------------------------
+# serving tier: explain() renders the trace; rejections name disparity
+# ---------------------------------------------------------------------------
+def test_explain_renders_decisions_and_fusion_rejection(tpch):
+    db, schema = tpch
+    svc = QueryService(db, schema)
+    small = f"SELECT COUNT(*) {_SUPP_DIMS}"
+    big_a = f"SELECT MIN(s.s_acctbal), MAX(s.s_acctbal) {_FIVE_WAY}"
+    big_b = f"SELECT SUM(s.s_acctbal) {_FIVE_WAY}"
+    results = svc.submit_many([small, big_a, big_b])
+    assert all(r.ok for r in results)
+    assert not results[0].stats.fused            # banded out by cost
+    assert results[1].stats.fused and results[2].stats.fused
+    assert svc.metrics()["fusion_cost_rejects"] >= 1
+
+    rep = svc.explain(small)
+    # machine-readable: every pass decision with its payload shape
+    assert rep["decisions"]
+    passes = {d["pass"] for d in rep["decisions"]}
+    assert "classify" in passes and "fk_join_eliminate" in passes
+    for d in rep["decisions"]:
+        assert set(d) == {"pass", "target", "applied", "reason", "stats",
+                          "depends"}
+    # the fusion rejection names the cost disparity
+    fa = rep["fusion_admission"]
+    assert fa is not None and not fa["admitted"]
+    assert "disparity" in fa["reason"]
+    assert fa["disparity"] == pytest.approx(svc.fusion_disparity)
+    assert fa["cost"] < fa["group_max_cost"]
+    # and the rendered report carries both sections
+    assert "planning decisions:" in rep["text"]
+    assert "fusion admission: rejected" in rep["text"]
+
+
+def test_feedback_demotes_regressed_fusion(tpch):
+    db, schema = tpch
+    svc = QueryService(db, schema)
+    batch = [f"SELECT MIN(s.s_acctbal), MAX(s.s_acctbal) {_SUPP_DIMS}",
+             f"SELECT SUM(s.s_acctbal) {_SUPP_DIMS}"]
+    first = svc.submit_many(batch)
+    assert all(r.stats.fused for r in first)
+    fp = first[0].stats.fingerprint
+    sig = svc.explain(batch[0])["fusion_admission"]["signature"]
+    assert sig
+    # force the observed-regression condition through the public feedback
+    # surface: fused serve times far above the solo baseline
+    svc.stats.observe_serve(fp, "", 1e-4)
+    svc.stats.observe_serve(fp, sig, 1.0)
+    svc.stats.observe_serve(fp, sig, 1.0)
+    assert svc.stats.is_demoted(fp, sig)
+
+    again = svc.submit_many(batch)
+    assert svc.metrics()["fusion_demotions"] >= 1
+    assert not any(r.stats.fused for r in again)   # group of 2 fell apart
+    rep = svc.explain(batch[0])
+    fa = rep["fusion_admission"]
+    assert not fa["admitted"] and "demoted" in fa["reason"]
+    # answers unchanged by the demotion
+    for a, b in zip(first, again):
+        assert set(a.values) == set(b.values)
+        for k in a.values:
+            np.testing.assert_array_equal(np.asarray(a.values[k]),
+                                          np.asarray(b.values[k]))

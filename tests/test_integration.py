@@ -12,7 +12,7 @@ from repro.checkpoint import Checkpointer
 from repro.data import TokenPipeline
 from repro.models import init_params
 from repro.models.moe import load_stats, moe_apply, moe_init
-from repro.serving import ServeEngine
+from repro.models.lm_serving import ServeEngine
 from repro.training import build_train_step, init_train_state
 
 jax.config.update("jax_platform_name", "cpu")

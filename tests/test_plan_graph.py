@@ -106,7 +106,8 @@ def test_subplan_keys_skip_trivial_scans(schema):
 def test_pass_pipeline_stages():
     names = [p.__name__ for p in PASSES]
     assert names == ["_pass_classify", "_pass_reroot_guard", "_pass_lower",
-                     "_pass_fkpk_degrade", "_pass_attach_selections"]
+                     "_pass_fkpk_degrade", "_pass_fk_join_eliminate",
+                     "_pass_prefilter_pushdown", "_pass_attach_selections"]
 
 
 def test_fkpk_pass_rewrites_the_lowered_graph(schema):

@@ -8,7 +8,7 @@ import pytest
 
 from repro.configs import get_smoke_config
 from repro.models import forward, init_params
-from repro.serving import ServeEngine, greedy_generate
+from repro.models.lm_serving import ServeEngine, greedy_generate
 
 jax.config.update("jax_platform_name", "cpu")
 
@@ -67,3 +67,16 @@ def test_wave_engine_multiple_waves():
         served.update(engine.run_wave(max_tokens=3))
     assert set(served) == set(rids)
     assert all(len(v) == 3 for v in served.values())
+
+
+def test_deprecated_serving_alias_still_exports_engine():
+    """The old ``repro.serving`` path re-exports from models.lm_serving
+    with a DeprecationWarning (reload forces the warning even when some
+    earlier import already cached the module)."""
+    import importlib
+
+    with pytest.warns(DeprecationWarning, match="repro.models.lm_serving"):
+        mod = importlib.import_module("repro.serving")
+        mod = importlib.reload(mod)
+    assert mod.ServeEngine is ServeEngine
+    assert mod.greedy_generate is greedy_generate
