@@ -74,6 +74,7 @@ snapshots + counters; validated by ``python -m benchmarks.recorder``).
 from __future__ import annotations
 
 import argparse
+import itertools
 import json
 import os
 import shutil
@@ -91,7 +92,7 @@ import numpy as np
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 from repro.data import make_tpch_db
-from repro.service import QueryService
+from repro.service import (QueryService, TenantAdmissionError, TenantPolicy)
 from repro.tables.table import Table, bucket_capacity
 
 FIG1 = """
@@ -539,6 +540,238 @@ def check_async(ra: dict) -> list[str]:
     if m["rejected"] != 0:
         fails.append(f"rejected={m['rejected']} — queue backpressure "
                      "tripped on an idle-sized workload")
+    return fails
+
+
+# ---- multi-tenant fair admission (adversarial mix) -------------------------
+# The victim's client-measured p95 (submit → future resolution, exact
+# wall-clock — NOT the log-bucketed histogram p95, whose ~33%/bucket
+# quantisation would dominate a 2× comparison) under flood must stay
+# within 2× its solo baseline; the absolute floor absorbs tiny-table
+# noise on a shared box.  The per-tenant histograms still gate
+# presence/shape via the metrics_v2()["tenants"] breakdown.
+MT_VICTIM_P95_BOUND = 2.0
+MT_VICTIM_P95_FLOOR_S = 0.05
+
+
+def run_multitenant(scale: int = 1000, rounds: int = 6, seed: int = 0):
+    """Adversarial tenant mix: one tenant floods malformed + oversized
+    (largest-tables join) queries under a tight token-bucket quota while
+    a victim tenant serves its dashboard.  The quota + per-tenant queues + DRR
+    keep the victim's engine-measured p95 near its solo baseline and its
+    answers bitwise-identical; a second window shows N tenants firing
+    the same dashboard share ONE fused program (fused compiles <
+    distinct requests across tenants) while accounting stays per-tenant."""
+    db, schema = make_tpch_db(scale=scale, seed=seed)
+    victim_sqls = [sql for _, sql in DASHBOARD_QUERIES[:4]]  # A-family
+    # oversized: the B-family scan over the two LARGEST tables
+    # (partsupp⋈part) — structurally disjoint from the victim's
+    # supplier⋈nation⋈region dashboards, so union-find never groups the
+    # flood with the victim and every window composition the flood
+    # creates reuses warmed signatures (the fairness gate then measures
+    # scheduling, not compile-on-novel-composition transients; fusing
+    # ACROSS tenants is gated by the 4-tenant window below)
+    flood_big = DASHBOARD_QUERIES[4][1]
+    flood_bad = "SELECT MIN(x.nope) FROM no_such_relation x"
+
+    svc0 = QueryService(db, schema)
+    baseline = [svc0.submit(q) for q in victim_sqls]
+
+    tenants = {
+        "victim": TenantPolicy(weight=2.0, priority=0),
+        "flood": TenantPolicy(rate=50.0, burst=8, max_queue=16,
+                              priority=1),
+    }
+
+    def new_service():
+        return QueryService(db, schema, async_max_wait_ms=5,
+                            async_max_batch=64, tenants=tenants)
+
+    def warm(svc):
+        # warm every plan/executable so both runs measure the warm path
+        # (cold compiles would swamp the fairness comparison)
+        for q in victim_sqls + [flood_big]:
+            svc.submit(q)
+        # ...including every FUSED composition a formation window can
+        # produce — a fused-program signature is a new executable even
+        # when every member plan is warm.  Window splits form subsets of
+        # the dashboard, and the serve-time feedback loop can demote a
+        # member mid-stream and re-group the REMAINDER into a novel
+        # signature (e.g. {v1,v2,v4} after v3 demotes), so compile every
+        # ≥2-member subset once up front; the flood query is
+        # structurally disjoint and always serves in its own singleton
+        # group, so it adds no compositions
+        for k in range(2, len(victim_sqls) + 1):
+            for combo in itertools.combinations(victim_sqls, k):
+                svc.submit_many(list(combo))
+        # then drive the calibrator to its steady state on the measured
+        # compositions: stop once two consecutive passes serve purely
+        # from caches — the fairness gate must time the steady state,
+        # not the calibration transient
+        quiet = 0
+        for _ in range(25):
+            rs = (svc.submit_many(victim_sqls)
+                  + svc.submit_many(victim_sqls + [flood_big]))
+            cached = all(r.stats.exec_source in ("exec_cache",
+                                                 "fused_cache")
+                         for r in rs)
+            quiet = quiet + 1 if cached else 0
+            if quiet >= 2:
+                break
+
+    def victim_rounds(svc):
+        out, lats = [], []
+        for _ in range(rounds):
+            futs = []
+            for q in victim_sqls:
+                t0 = time.perf_counter()
+                f = svc.submit_async(q, tenant="victim")
+                f.add_done_callback(
+                    lambda _f, t0=t0: lats.append(time.perf_counter() - t0))
+                futs.append(f)
+            out.append([f.result(300) for f in futs])
+        return out, lats
+
+    # solo baseline: the victim alone on an identically-configured service
+    svc_solo = new_service()
+    warm(svc_solo)
+    solo_results, solo_lats = victim_rounds(svc_solo)
+    svc_solo.close(timeout=300)
+
+    # adversarial mix: the flooder hammers as fast as it can; its quota
+    # (not the victim's latency) is what bounds what gets through
+    svc = new_service()
+    warm(svc)
+    stop = threading.Event()
+    flood = {"submitted": 0, "rejected_rate": 0, "rejected_depth": 0}
+
+    def flooder():
+        i = 0
+        while not stop.is_set():
+            q = flood_bad if i % 2 == 0 else flood_big
+            i += 1
+            flood["submitted"] += 1
+            try:
+                svc.submit_async(q, tenant="flood")
+            except TenantAdmissionError as e:
+                flood[f"rejected_{e.kind}"] += 1
+            time.sleep(0.0005)
+
+    th = threading.Thread(target=flooder)
+    th.start()
+    mixed_results, mixed_lats = victim_rounds(svc)
+    stop.set()
+    th.join(30)
+    svc.close(timeout=300)             # drain the flooder's leftovers
+    v2 = svc.metrics_v2()
+
+    victim_identical = all(
+        r.error is None and _values_equal(b.values, r.values)
+        for rnd in (solo_results, mixed_results) for row in rnd
+        for b, r in zip(baseline, row))
+
+    # cross-tenant fusion: 4 tenants × the same 2-query dashboard in one
+    # formation window → one fused program, per-tenant accounting
+    xt_tenants = [f"t{i}" for i in range(4)]
+    xt_sqls = [sql for _, sql in DASHBOARD_QUERIES[:2]]
+    svc_x = QueryService(db, schema, async_max_wait_ms=500,
+                         async_max_batch=64)
+    pairs = [(t, q) for t in xt_tenants for q in xt_sqls]
+    barrier = threading.Barrier(len(pairs))
+    xfuts: list = [None] * len(pairs)
+
+    def xcaller(i):
+        barrier.wait()
+        xfuts[i] = svc_x.submit_async(pairs[i][1], tenant=pairs[i][0])
+
+    xthreads = [threading.Thread(target=xcaller, args=(i,))
+                for i in range(len(pairs))]
+    for t in xthreads:
+        t.start()
+    for t in xthreads:
+        t.join()
+    xres = [f.result(300) for f in xfuts]
+    x_identical = all(
+        r.error is None and _values_equal(baseline[j % 2].values, r.values)
+        for j, r in enumerate(xres))
+    xv2 = svc_x.metrics_v2()
+    svc_x.close()
+
+    return {
+        "rounds": rounds,
+        "victim_queries": len(victim_sqls),
+        "solo_p95_s": float(np.percentile(solo_lats, 95)),
+        "mixed_p95_s": float(np.percentile(mixed_lats, 95)),
+        "victim_identical": victim_identical,
+        "flood_client": flood,
+        "tenants": v2["tenants"],
+        "metrics": {**v2["counters"], **v2["gauges"]},
+        "xt_requests": len(pairs),
+        "xt_distinct": len(xt_sqls),
+        "xt_identical": x_identical,
+        "xt_tenants": xv2["tenants"],
+        "xt_metrics": {**xv2["counters"], **xv2["gauges"]},
+    }
+
+
+def check_multitenant(rt: dict) -> list[str]:
+    """Gate the adversarial-mix scenario; returns failures."""
+    fails = []
+    vt = rt["tenants"].get("victim", {})
+    ft = rt["tenants"].get("flood", {})
+    # per-tenant counters/histograms must be present and populated
+    for name, t in (("victim", vt), ("flood", ft)):
+        for k in ("requests", "rejected", "fused_share", "p50_s", "p95_s",
+                  "p99_s"):
+            if k not in t:
+                fails.append(f"metrics_v2()['tenants'][{name!r}] missing "
+                             f"{k!r}")
+    expected = rt["rounds"] * rt["victim_queries"]
+    if vt.get("requests", 0) != expected:
+        fails.append(f"victim served {vt.get('requests')} != {expected} "
+                     "submitted")
+    if vt.get("errors", 0) != 0:
+        fails.append(f"victim errors={vt.get('errors')} — flood damage "
+                     "leaked across tenants")
+    if not rt["victim_identical"]:
+        fails.append("victim answers under flood differ from serial "
+                     "submission")
+    # the flooding tenant must be held back by ITS quota...
+    if ft.get("rejected", 0) < 1:
+        fails.append("flooding tenant was never rejected — per-tenant "
+                     "quota is not enforcing")
+    # ...while whatever it got admitted stayed isolated (malformed
+    # queries fail alone, under the flooder's name)
+    if ft.get("errors", 0) < 1:
+        fails.append("no flood error captured — malformed queries were "
+                     "not served/isolated under the flooder's tenant")
+    bound = (MT_VICTIM_P95_BOUND * rt["solo_p95_s"]
+             + MT_VICTIM_P95_FLOOR_S)
+    if rt["mixed_p95_s"] > bound:
+        fails.append(f"victim p95 {rt['mixed_p95_s'] * 1e3:.1f} ms under "
+                     f"flood exceeds {MT_VICTIM_P95_BOUND}x solo "
+                     f"{rt['solo_p95_s'] * 1e3:.1f} ms (+ floor)")
+    # cross-tenant fusion: N tenants × one dashboard = ONE program
+    xm = rt["xt_metrics"]
+    if not rt["xt_identical"]:
+        fails.append("cross-tenant answers differ from serial submission")
+    if xm["fused_compiles"] >= rt["xt_requests"]:
+        fails.append(f"fused_compiles={xm['fused_compiles']} not below "
+                     f"{rt['xt_requests']} distinct requests across "
+                     "tenants")
+    if xm["compiles"] > rt["xt_distinct"]:
+        fails.append(f"compiles={xm['compiles']} > {rt['xt_distinct']} "
+                     "distinct fingerprints — tenants are not sharing "
+                     "programs")
+    if xm["dedup_saved"] < rt["xt_requests"] - rt["xt_distinct"]:
+        fails.append(f"dedup_saved={xm['dedup_saved']} — same-fingerprint "
+                     "requests across tenants did not dedup")
+    for t in ("t0", "t1", "t2", "t3"):
+        if rt["xt_tenants"].get(t, {}).get("requests", 0) != 2:
+            fails.append(f"tenant {t} accounting lost requests")
+    if rt["metrics"].get("open_requests", 0) != 0:
+        fails.append(f"open_requests={rt['metrics']['open_requests']} "
+                     "after the mix — root spans leaked")
     return fails
 
 
@@ -1085,6 +1318,30 @@ def main(argv=None):
             f"compiles={ma['compiles']};batches={ma['async_batches']};"
             f"queue_depth_peak={ma['queue_depth_peak']}")
     fused_fails += check_async(ra)
+
+    rt = run_multitenant(scale=scale, rounds=4 if tiny else 6,
+                         seed=args.seed)
+    vt, ft = rt["tenants"]["victim"], rt["tenants"]["flood"]
+    print(f"multi-tenant mix  victim {rt['rounds']}×"
+          f"{rt['victim_queries']} dashboard queries vs a flooding "
+          f"tenant ({rt['flood_client']['submitted']} attempts)")
+    print(f"  victim p95      {rt['mixed_p95_s'] * 1e3:>10.1f} ms under "
+          f"flood vs {rt['solo_p95_s'] * 1e3:.1f} ms solo "
+          f"(identical={rt['victim_identical']}, errors={vt['errors']})")
+    print(f"  flood held to   {ft['requests']:>10d} served "
+          f"(rejected {ft['rejected']}: rate={ft['rejected_rate']} "
+          f"depth={ft['rejected_depth']}; errors={ft['errors']} isolated)")
+    print(f"  cross-tenant    {rt['xt_requests']:>10d} requests / "
+          f"{rt['xt_distinct']} fingerprints over 4 tenants → "
+          f"{rt['xt_metrics']['compiles']} compiles "
+          f"(fused_queries={rt['xt_metrics']['fused_queries']}, "
+          f"identical={rt['xt_identical']})")
+    rec.row("serving.tenant.victim_solo", rt["solo_p95_s"] * 1e6,
+            "p95;victim alone")
+    rec.row("serving.tenant.victim_flooded", rt["mixed_p95_s"] * 1e6,
+            f"p95;flood_rejected={ft['rejected']};"
+            f"flood_served={ft['requests']}")
+    fused_fails += check_multitenant(rt)
 
     rz = run_misfusion(scale=scale, repeats=3 if tiny else 5,
                        seed=args.seed)

@@ -190,6 +190,45 @@ def _stats_threshold_discipline(paths: list[str]) -> int:
     return 1 if failures else 0
 
 
+def _future_resolution_discipline(paths: list[str]) -> int:
+    """Forbid direct ``Future.set_result``/``set_exception`` calls in
+    ``src/repro/service/`` outside ``scheduler._resolve``.  ``_resolve``
+    is the single sanctioned resolution path: it tolerates the
+    caller-side cancel race (``InvalidStateError``), so a raw call
+    elsewhere reintroduces the crash a cancelled future causes mid-serve.
+    Tests are exempt (they resolve throwaway futures to build fixtures).
+    Always runs, even when ruff/pyflakes handle the general lint."""
+    failures = 0
+    for f in _py_files(paths):
+        parts = f.parts
+        if "service" not in parts or "repro" not in parts:
+            continue
+        try:
+            tree = ast.parse(f.read_text(), filename=str(f))
+        except SyntaxError:
+            continue  # the builtin lint reports syntax errors
+        allowed: list[tuple[int, int]] = []  # _resolve line ranges
+        if f.name == "scheduler.py":
+            allowed = [(n.lineno, n.end_lineno or n.lineno)
+                       for n in ast.walk(tree)
+                       if isinstance(n, (ast.FunctionDef,
+                                         ast.AsyncFunctionDef))
+                       and n.name == "_resolve"]
+        for node in ast.walk(tree):
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr in ("set_result", "set_exception")):
+                continue
+            if any(lo <= node.lineno <= hi for lo, hi in allowed):
+                continue
+            print(f"{f}:{node.lineno}: direct Future."
+                  f"{node.func.attr} in the serving tier — resolve "
+                  "futures through scheduler._resolve (the cancel-race "
+                  "guard must stay the single resolution path)")
+            failures += 1
+    return 1 if failures else 0
+
+
 def _builtin_lint(paths: list[str]) -> int:
     print("lint: ruff/pyflakes not installed — built-in syntax + "
           "unused-import check")
@@ -220,12 +259,13 @@ def main(argv: list[str]) -> int:
     shard_rc = _shard_map_discipline(paths)
     block_rc = _block_shape_discipline(paths)
     stats_rc = _stats_threshold_discipline(paths)
+    future_rc = _future_resolution_discipline(paths)
     rc = _external(["ruff", "check"], paths)
     if rc is None:
         rc = _external(["pyflakes"], paths)
     if rc is None:
         rc = _builtin_lint(paths)
-    rc = rc or clock_rc or shard_rc or block_rc or stats_rc
+    rc = rc or clock_rc or shard_rc or block_rc or stats_rc or future_rc
     print("lint: OK" if rc == 0 else "lint: FAIL")
     return rc
 

@@ -28,7 +28,18 @@
 #                                # fused; zero recompiles on within-bucket
 #                                # per-shard growth; warm restart with
 #                                # plan_builds == 0 from the topology-keyed
-#                                # store partition).
+#                                # store partition), AND the multi-tenant
+#                                # adversarial-mix scenario (one tenant
+#                                # flooding malformed + oversized queries is
+#                                # held to its token-bucket/queue quota with
+#                                # TYPED rejections while the victim
+#                                # tenant's p95 stays within 2x its solo
+#                                # baseline and its answers stay bitwise-
+#                                # identical; cross-tenant submissions still
+#                                # fuse — fused compiles < requests; per-
+#                                # tenant counters/histograms appear in
+#                                # metrics_v2()["tenants"]; no root span
+#                                # leaks — open_requests == 0).
 #                                # Writes + schema-validates the
 #                                # BENCH_serving.json perf trajectory.
 set -euo pipefail
@@ -44,7 +55,7 @@ if [[ "${1:-}" == "--smoke" ]]; then
   for f in BENCH_serving.json BENCH_tuning.json; do
     [[ -f "$f" ]] && cp "$f" "$f.prev"
   done
-  echo "== smoke: fused + mixed + async + restart + tracing + mesh gates =="
+  echo "== smoke: fused + mixed + async + restart + tracing + mesh + tenant gates =="
   python benchmarks/serving_queries.py --smoke --record BENCH_serving.json
   echo "== smoke: BENCH_serving.json schema check =="
   python -m benchmarks.recorder BENCH_serving.json

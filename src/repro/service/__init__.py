@@ -16,6 +16,8 @@ from repro.service.engine import (
     QueryResult,
     QueryService,
     ServeStats,
+    ServiceClosedError,
+    TenantAdmissionError,
 )
 from repro.service.fingerprint import (
     CanonicalQuery,
@@ -24,6 +26,7 @@ from repro.service.fingerprint import (
     prefix_fingerprint,
 )
 from repro.service.observability import (
+    DEFAULT_TENANT,
     Histogram,
     Observability,
     TraceSpan,
@@ -35,13 +38,14 @@ from repro.service.plan_store import (
     schema_fingerprint,
     store_fingerprint,
 )
-from repro.service.scheduler import AsyncScheduler
+from repro.service.scheduler import AsyncScheduler, TenantPolicy
 from repro.service.stats_store import StatsStore
 from repro.service.tune_store import TuneStore
 
 __all__ = [
     "AdmissionError",
     "AsyncScheduler",
+    "DEFAULT_TENANT",
     "CanonicalQuery",
     "canonicalize",
     "enable_executable_cache",
@@ -56,7 +60,10 @@ __all__ = [
     "QueryResult",
     "QueryService",
     "ServeStats",
+    "ServiceClosedError",
     "StatsStore",
+    "TenantAdmissionError",
+    "TenantPolicy",
     "TuneStore",
     "schema_fingerprint",
     "store_fingerprint",

@@ -148,7 +148,8 @@ from repro.core.rewrite import plan_query
 from repro.core.sql import parse_sql
 from repro.core.stats import FUSION_COST_DISPARITY, StatsCatalog
 from repro.service.fingerprint import CanonicalQuery, canonicalize
-from repro.service.observability import NULL_SPAN, Observability, TraceSpan
+from repro.service.observability import (DEFAULT_TENANT, NULL_SPAN,
+                                         Observability, TraceSpan)
 from repro.service.plan_cache import LRUCache, PlanCache, ShapeBucket
 from repro.kernels.autotune import KernelTuner
 from repro.service.plan_store import (
@@ -163,8 +164,30 @@ from repro.tables.table import Schema, Table, bucket_capacity
 
 
 class AdmissionError(ValueError):
-    """A request referenced a relation the service cannot serve (present
-    in the schema but with no table loaded, or unknown entirely)."""
+    """A request the service refused at the door: a relation it cannot
+    serve (present in the schema but with no table loaded, or unknown
+    entirely), or async-tier backpressure (see the subclasses)."""
+
+
+class TenantAdmissionError(AdmissionError):
+    """Async admission rejected a request under its tenant's policy.
+    ``tenant`` names the offender; ``kind`` is ``"rate"`` (token bucket
+    empty) or ``"depth"`` (the tenant's queue is at its bound) — retry
+    loops can back off differently for the two causes."""
+
+    def __init__(self, tenant: str, kind: str, message: str):
+        super().__init__(message)
+        self.tenant = tenant
+        self.kind = kind
+
+
+class ServiceClosedError(AdmissionError, RuntimeError):
+    """The async tier is stopped (``close()`` ran, or the service was
+    garbage-collected): typed so retry loops written against
+    ``AdmissionError`` backpressure survive shutdown.  Also a
+    ``RuntimeError`` for callers of the pre-typed contract.  Counted as
+    ``rejected_closed``, never ``rejected`` — shutdown is not
+    backpressure."""
 
 
 @dataclasses.dataclass
@@ -216,6 +239,7 @@ class _Request:
     error: BaseException | None = None   # captured per-request failure
     unit: "_Unit | None" = None          # back-pointer set by _plan_unit
     trace: Any = NULL_SPAN               # this request's root TraceSpan
+    tenant: str = DEFAULT_TENANT         # owning tenant (metrics rollup)
 
 
 @dataclasses.dataclass
@@ -259,7 +283,8 @@ class QueryService:
                  mesh: "jax.sharding.Mesh | None" = None,
                  data_axes: tuple[str, ...] | None = None,
                  mesh_presort: bool = False,
-                 fusion_disparity: float | None = None):
+                 fusion_disparity: float | None = None,
+                 tenants: "dict[str, Any] | None" = None):
         self._db = dict(db)
         self.schema = schema
         self.mode = mode
@@ -298,8 +323,11 @@ class QueryService:
             "partial_fusions",        # fused runs beyond whole-prefix rule
             "subplan_saved",          # subplan executions avoided
             "compile_s_total",        # float: total seconds compiling
-            # async tier (bumped by the scheduler once it starts)
+            # async tier (bumped by the scheduler once it starts).
+            # rejected = tenant backpressure (rate/depth);
+            # rejected_closed = shutdown — counted apart on purpose
             "async_requests", "async_batches", "rejected",
+            "rejected_closed",
             # cost-calibrated planning
             "stat_refreshes",         # full per-table stats computes ran
                                       # (0 in a fully warm-started process)
@@ -398,9 +426,13 @@ class QueryService:
         # in-flight events
         self._lock = threading.RLock()
         self._inflight: dict[tuple, threading.Event] = {}
-        # async tier: started lazily on the first submit_async
+        # async tier: started lazily on the first submit_async.
+        # ``tenants`` maps tenant name -> TenantPolicy (quota / queue
+        # bound / DRR weight / priority lane); unlisted tenants get the
+        # unlimited default policy on first touch.
         self._async_opts = (async_max_batch, async_max_wait_ms,
                             async_max_queue)
+        self._tenant_policies = dict(tenants) if tenants else {}
         self._scheduler = None
         self._async_closed = False
 
@@ -554,16 +586,18 @@ class QueryService:
         return padded
 
     # ---- request plane ---------------------------------------------------
-    def submit(self, query) -> QueryResult:
+    def submit(self, query, *, tenant: str | None = None) -> QueryResult:
         """Serve one query (SQL text or AggQuery).  Raises the captured
         error for a single-query caller (batch callers get it attached to
-        the request's ``QueryResult.error`` instead)."""
-        res = self.submit_many([query])[0]
+        the request's ``QueryResult.error`` instead).  ``tenant`` rolls
+        the request into that tenant's counters/latency histogram."""
+        res = self.submit_many([query], tenant=tenant)[0]
         if res.error is not None:
             raise res.error
         return res
 
-    def submit_many(self, queries) -> list[QueryResult]:
+    def submit_many(self, queries, *, tenant: str | None = None) \
+            -> list[QueryResult]:
         """Serve a batch of concurrent requests.
 
         Requests sharing a fingerprint are answered by one executable
@@ -576,22 +610,30 @@ class QueryService:
         and never aborts its batch-mates.
 
         The async scheduler hands over the root spans it opened at
-        enqueue time (so queue-wait is part of each request's tree)
-        through the ``_trace_handoff`` thread-local — a side channel, not
-        a parameter, so the public signature stays wrappable (tests
-        monkeypatch ``submit_many``); sync callers get a fresh root per
-        query here."""
+        enqueue time (so queue-wait is part of each request's tree) and
+        each request's tenant through the ``_trace_handoff`` thread-local
+        — a side channel, not a parameter, so the public signature stays
+        wrappable (tests monkeypatch ``submit_many``); sync callers get a
+        fresh root per query here, rolled up under ``tenant`` (default:
+        the shared default tenant)."""
         queries = list(queries)          # accept any iterable
         _traces = getattr(self._trace_handoff, "traces", None)
+        _tenants = getattr(self._trace_handoff, "tenants", None)
         self._trace_handoff.traces = None
+        self._trace_handoff.tenants = None
         if not queries:
             return []                    # no work: don't count a batch
+        tenant = DEFAULT_TENANT if tenant is None else str(tenant)
+        if _tenants is None or len(_tenants) != len(queries):
+            _tenants = [tenant] * len(queries)
         if _traces is None or len(_traces) != len(queries):
-            _traces = [self.obs.begin_request() for _ in queries]
+            _traces = [self.obs.begin_request(tenant=ten)
+                       for ten in _tenants]
         # every submission counts, admitted or not — request_errors /
         # requests is then a meaningful error rate
         self.obs.inc("requests", len(queries))
-        reqs = [self._try_admit(q, t) for q, t in zip(queries, _traces)]
+        reqs = [self._try_admit(q, t, ten)
+                for q, t, ten in zip(queries, _traces, _tenants)]
         served = self._serve_batch([r for r in reqs if r.error is None])
         out = []
         errors = 0
@@ -599,18 +641,23 @@ class QueryService:
             res = served.get(id(r))
             if res is None:              # admission/parse failure
                 res = QueryResult({}, r.stats, error=r.error)
+            self.obs.tenant_inc(r.tenant, "requests")
             if res.error is not None:
                 errors += 1
                 r.trace.note(error=type(res.error).__name__)
+                self.obs.tenant_inc(r.tenant, "errors")
+            elif res.stats.fused:
+                self.obs.tenant_inc(r.tenant, "fused")
             if r.trace is not NULL_SPAN:
                 r.stats.trace = r.trace
-            self.obs.end_request(r.trace)
+            self.obs.end_request(r.trace, tenant=r.tenant)
             out.append(res)
         if errors:
             self.obs.inc("request_errors", errors)
         return out
 
-    def submit_async(self, query) -> Future[QueryResult]:
+    def submit_async(self, query, *, tenant: str | None = None) \
+            -> Future[QueryResult]:
         """Queue one query for background batch formation; returns a
         ``concurrent.futures.Future`` resolving to its ``QueryResult``
         (or raising its captured per-request error).
@@ -618,22 +665,28 @@ class QueryService:
         Queries from independent callers that land in the same batching
         window are served by ONE ``_serve_batch`` call, so they dedup,
         fuse, and share compiled programs exactly as if a single caller
-        had handed them to ``submit_many``.  Raises ``AdmissionError``
-        when the bounded admission queue is full (backpressure)."""
+        had handed them to ``submit_many`` — across tenants too: quota
+        accounting is per tenant, the compiled program is shared.  Raises
+        ``TenantAdmissionError`` when ``tenant`` is over its queue-depth
+        bound or token-bucket rate (backpressure; the error names the
+        tenant and the cause), ``ServiceClosedError`` after ``close()``."""
         sch = self._scheduler
         if sch is None:
             from repro.service.scheduler import AsyncScheduler
             with self._lock:
                 if self._async_closed:
-                    raise RuntimeError("service closed: the async tier is "
-                                       "stopped (sync submit still works)")
+                    self.obs.inc("rejected_closed")
+                    raise ServiceClosedError(
+                        "service closed: the async tier is stopped "
+                        "(sync submit still works)")
                 if self._scheduler is None:
                     max_batch, max_wait_ms, max_queue = self._async_opts
                     self._scheduler = AsyncScheduler(
                         self, max_batch=max_batch, max_wait_ms=max_wait_ms,
-                        max_queue=max_queue)
+                        max_queue=max_queue,
+                        tenants=self._tenant_policies)
                 sch = self._scheduler
-        return sch.submit_async(query)
+        return sch.submit_async(query, tenant=tenant)
 
     def close(self, timeout: float | None = 10.0) -> None:
         """Stop the async batcher (if started), draining queued requests.
@@ -845,13 +898,14 @@ class QueryService:
                     r.canon.rename_results(r.unit.results), r.stats)
         return results
 
-    def _try_admit(self, query, trace=NULL_SPAN) -> _Request:
+    def _try_admit(self, query, trace=NULL_SPAN,
+                   tenant: str = DEFAULT_TENANT) -> _Request:
         """Admission with per-request error capture."""
         try:
-            return self._admit(query, trace)
+            return self._admit(query, trace, tenant)
         except Exception as e:
             return _Request(canon=None, stats=ServeStats(), error=e,
-                            trace=trace)
+                            trace=trace, tenant=tenant)
 
     def _try_serve(self, serve: Callable, u: _Unit) -> None:
         """Run one unit's serve step, attaching a failure to that unit's
@@ -862,7 +916,8 @@ class QueryService:
             for r in u.group:
                 r.error = e
 
-    def _admit(self, query, trace=NULL_SPAN) -> _Request:
+    def _admit(self, query, trace=NULL_SPAN,
+               tenant: str = DEFAULT_TENANT) -> _Request:
         stats = ServeStats()
         if isinstance(query, str):
             with self.obs.span(trace, "parse") as sp:
@@ -882,7 +937,7 @@ class QueryService:
             canon = canonicalize(query)
         stats.fingerprint = canon.fingerprint
         trace.note(fingerprint=canon.fingerprint)
-        return _Request(canon, stats, trace=trace)
+        return _Request(canon, stats, trace=trace, tenant=tenant)
 
     def _plan_unit(self, group: list[_Request]) -> _Unit:
         """Plan lookup for one fingerprint group: memory (plan-cache L1) →
@@ -1285,7 +1340,11 @@ class QueryService:
 
     # ---- observability ---------------------------------------------------
     def metrics_v2(self) -> dict[str, Any]:
-        """Structured metrics: ``{"counters", "gauges", "histograms"}``.
+        """Structured metrics: ``{"counters", "gauges", "histograms",
+        "tenants"}``.  ``"tenants"`` maps every tenant seen so far to its
+        requests/errors/fused counts, rejections split by cause
+        (rate/depth/closed), fused-share, and request-latency
+        p50/p95/p99 — starvation is visible per tenant, not inferred.
 
         The service counters (requests/compiles/fused_*/async_*/...) come
         from ONE lock acquisition inside ``Observability.snapshot`` — so

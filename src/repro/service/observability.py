@@ -48,6 +48,7 @@ from __future__ import annotations
 import bisect
 import collections
 import json
+import os
 import threading
 import time
 from typing import Any, Callable, Iterable
@@ -56,6 +57,23 @@ from typing import Any, Callable, Iterable
 # (scripts/lint.py forbids raw time.perf_counter elsewhere in
 # src/repro/service/).
 MONOTONIC: Callable[[], float] = time.perf_counter
+
+# The tenant every request belongs to unless the caller says otherwise.
+# Single-tenant deployments never have to mention tenants at all: the
+# default tenant has no quota, weight 1, and the scheduler-wide queue
+# bound, so pre-multi-tenant behaviour is preserved exactly.
+DEFAULT_TENANT = "default"
+
+
+def _strict_spans() -> bool:
+    """Whether span-lifecycle misuse should raise instead of passing
+    silently.  On under pytest (so a ``note()`` on a closed span is a
+    loud test failure, not a silently-dropped Chrome-trace annotation);
+    REPRO_STRICT_SPANS=0/1 overrides either way."""
+    flag = os.environ.get("REPRO_STRICT_SPANS")
+    if flag is not None:
+        return flag not in ("", "0", "false", "no")
+    return "PYTEST_CURRENT_TEST" in os.environ
 
 # Log-spaced bucket upper bounds (seconds): 8 per decade, 1 µs … 100 s.
 # Built once at import; every histogram shares the tuple, so a warmed
@@ -147,7 +165,14 @@ class TraceSpan:
         return max(0.0, self.t1 - self.t0) if self.closed else 0.0
 
     def note(self, **kv) -> None:
-        """Attach key/value annotations (rendered as Chrome-trace args)."""
+        """Attach key/value annotations (rendered as Chrome-trace args).
+        Must happen while the span is open: ``close_span`` folds the span
+        into histograms and (for roots) the export retention, so a late
+        note races the reader.  Under tests a late note raises."""
+        if self.closed and _strict_spans():
+            raise RuntimeError(
+                f"note() on closed span {self.name!r} ({kv!r}) — annotate "
+                "before close_span/end_request")
         self.args.update(kv)
 
     def child_duration(self, name: str) -> float:
@@ -229,6 +254,16 @@ class Observability:
         self._hists: dict[str, Histogram] = {}
         self._traces: collections.deque[TraceSpan] = \
             collections.deque(maxlen=max_traces)
+        # per-tenant accounting: counters (requests/errors/fused/
+        # rejected_*) and a request-latency histogram per tenant.  Kept
+        # separate from the flat counter namespace so tenant names can
+        # never collide with service counters.
+        self._tenant_counters: dict[str, dict[str, int | float]] = {}
+        self._tenant_hists: dict[str, Histogram] = {}
+        # roots opened via begin_request but not yet ended — the span-leak
+        # detector: a request that dies on an abnormal path MUST still be
+        # ended, so this reads 0 whenever the service is idle.
+        self._open_requests = 0
 
     # ---- counters / gauges ----------------------------------------------
     def register_counters(self, names: Iterable[str]) -> None:
@@ -246,6 +281,23 @@ class Observability:
     def counter(self, name: str) -> int | float:
         with self._lock:
             return self._counters.get(name, 0)
+
+    def tenant_inc(self, tenant: str, name: str, n: int | float = 1) -> None:
+        """Bump a per-tenant counter (requests/errors/fused/rejected_*).
+        Tenants materialise in ``snapshot()["tenants"]`` on first touch."""
+        with self._lock:
+            d = self._tenant_counters.setdefault(tenant, {})
+            d[name] = d.get(name, 0) + n
+
+    def tenant_counter(self, tenant: str, name: str) -> int | float:
+        with self._lock:
+            return self._tenant_counters.get(tenant, {}).get(name, 0)
+
+    def open_requests(self) -> int:
+        """Roots opened via ``begin_request`` but not yet ended — 0 on an
+        idle service; anything else is a span leak."""
+        with self._lock:
+            return self._open_requests
 
     def set_gauge(self, name: str, value: int | float) -> None:
         """Set a gauge; any peak gauge tracking it ratchets up with it."""
@@ -265,20 +317,35 @@ class Observability:
             self._gauges.setdefault(source, 0)
 
     # ---- spans -----------------------------------------------------------
-    def begin_request(self, name: str = "request", **args) -> TraceSpan:
-        """Open a trace root.  Close with ``end_request``."""
+    def begin_request(self, name: str = "request", *, tenant: str | None
+                      = None, **args) -> TraceSpan:
+        """Open a trace root.  Close with ``end_request``.  ``tenant``
+        stamps the owning tenant onto the root's args (visible in the
+        Chrome-trace export) — pass the same tenant to ``end_request`` to
+        land the latency in that tenant's histogram."""
         if not self.enabled:
             return NULL_SPAN
+        if tenant is not None:
+            args["tenant"] = tenant
+        with self._lock:
+            self._open_requests += 1
         return TraceSpan(name, self.clock(), threading.get_ident(), args)
 
-    def end_request(self, root: TraceSpan) -> None:
-        """Close a root, record its latency histogram, retain the tree
-        for export."""
+    def end_request(self, root: TraceSpan, *, tenant: str | None = None) \
+            -> None:
+        """Close a root, record its latency histogram (and the tenant's,
+        when given), retain the tree for export."""
         if root is NULL_SPAN or root.closed:
             return
         root.t1 = self.clock()
         with self._lock:
+            self._open_requests -= 1
             self._observe_locked(root.name, root.duration_s)
+            if tenant is not None:
+                h = self._tenant_hists.get(tenant)
+                if h is None:
+                    h = self._tenant_hists[tenant] = Histogram()
+                h.record(root.duration_s)
             self._traces.append(root)
 
     def open_span(self, parents, name: str, **args) -> TraceSpan:
@@ -331,18 +398,45 @@ class Observability:
     # ---- read side -------------------------------------------------------
     def snapshot(self) -> dict[str, Any]:
         """One consistent read of everything this registry owns, under one
-        lock acquisition: ``{"counters", "gauges", "histograms"}``.  Peak
-        gauges report their high-water mark since the previous snapshot
-        and reset to their source gauge's current value."""
+        lock acquisition: ``{"counters", "gauges", "histograms",
+        "tenants"}``.  Peak gauges report their high-water mark since the
+        previous snapshot and reset to their source gauge's current value.
+        ``"tenants"`` maps each tenant touched so far to its counters
+        (requests/errors/fused/rejected split by cause), its fused-share,
+        and its request-latency percentiles."""
         with self._lock:
             counters = dict(self._counters)
             gauges = dict(self._gauges)
+            gauges["open_requests"] = self._open_requests
             for peak, source in self._peaks.items():
                 current = self._gauges.get(source, 0)
                 gauges[peak] = max(self._peak_values.get(peak, 0), current)
                 self._peak_values[peak] = current
             hists = {name: h.snapshot() for name, h in self._hists.items()}
-        return {"counters": counters, "gauges": gauges, "histograms": hists}
+            tenants: dict[str, Any] = {}
+            for name in sorted(set(self._tenant_counters)
+                               | set(self._tenant_hists)):
+                c = self._tenant_counters.get(name, {})
+                entry: dict[str, Any] = {
+                    "requests": c.get("requests", 0),
+                    "errors": c.get("errors", 0),
+                    "fused": c.get("fused", 0),
+                    "rejected_rate": c.get("rejected_rate", 0),
+                    "rejected_depth": c.get("rejected_depth", 0),
+                    "rejected_closed": c.get("rejected_closed", 0),
+                }
+                entry["rejected"] = (entry["rejected_rate"]
+                                     + entry["rejected_depth"])
+                entry["fused_share"] = (entry["fused"] / entry["requests"]
+                                        if entry["requests"] else 0.0)
+                h = self._tenant_hists.get(name)
+                hsnap = h.snapshot() if h is not None else {
+                    "count": 0, "p50_s": 0.0, "p95_s": 0.0, "p99_s": 0.0}
+                for k in ("count", "p50_s", "p95_s", "p99_s"):
+                    entry[k] = hsnap[k]
+                tenants[name] = entry
+        return {"counters": counters, "gauges": gauges, "histograms": hists,
+                "tenants": tenants}
 
     def traces(self) -> list[TraceSpan]:
         """The retained completed request trees, oldest first."""

@@ -11,7 +11,7 @@ import numpy as np
 import pytest
 
 from repro.data import make_tpch_db
-from repro.service import AdmissionError, QueryService
+from repro.service import AdmissionError, QueryService, ServiceClosedError
 from repro.tables.table import Table, bucket_capacity
 
 jax.config.update("jax_platform_name", "cpu")
@@ -191,8 +191,19 @@ def test_async_close_drains_pending_requests():
     svc.close(timeout=120)
     for f in futs:
         assert f.result(1).error is None
+    # typed close-time rejection: an AdmissionError subclass (so retry
+    # loops written against backpressure survive shutdown) that is ALSO
+    # a RuntimeError (the pre-typed contract), counted apart from
+    # backpressure rejections
+    with pytest.raises(ServiceClosedError, match="closed"):
+        svc.submit_async(FIG1)
+    with pytest.raises(AdmissionError):
+        svc.submit_async(FIG1)
     with pytest.raises(RuntimeError, match="closed"):
         svc.submit_async(FIG1)
+    m = svc.metrics()
+    assert m["rejected_closed"] == 3
+    assert m["rejected"] == 0
     # sync serving still works after close
     assert svc.submit(FIG1).values
 

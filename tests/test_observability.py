@@ -263,7 +263,12 @@ def test_metrics_v2_shape_and_flat_view_equivalence(tpch):
     svc = QueryService(db, schema)
     svc.submit_many(FAMILY)
     v2 = svc.metrics_v2()
-    assert set(v2) == {"counters", "gauges", "histograms"}
+    assert set(v2) == {"counters", "gauges", "histograms", "tenants"}
+    # sync submissions without an explicit tenant roll into the default
+    # tenant's counters and latency histogram
+    dt = v2["tenants"]["default"]
+    assert dt["requests"] == len(FAMILY) and dt["count"] == len(FAMILY)
+    assert dt["p50_s"] <= dt["p95_s"] <= dt["p99_s"]
     for stage in ("parse", "fingerprint", "plan", "pad", "compile", "run",
                   "request"):
         h = v2["histograms"][stage]
